@@ -1,0 +1,55 @@
+"""Paper §7.5 / Fig. 15 control experiments on the CNN family (U250):
+
+  (a) full TAPA (floorplan constraints + pipelining)      — green curve
+  (b) pipelining computed but floorplan NOT passed to P&R — blue curve
+  (c) floorplanning without pipelining                     — Fig. 3's point
+  (d) 4-slot grid (die boundaries only, no middle column)  — yellow curve
+"""
+from __future__ import annotations
+
+from repro.core import (Boundary, SlotGrid, analyze_timing, autobridge,
+                        packed_placement)
+from repro.fpga import benchmarks as B, u250_grid
+
+
+def four_slot_grid(max_util=0.7):
+    g = u250_grid(max_util)
+    return SlotGrid("U250-4slot", rows=4, cols=1,
+                    base_capacity={k: v * 2 for k, v in
+                                   g.base_capacity.items()},
+                    slot_caps={(r, 0): {"ddr_channels": 4.0}
+                               for r in range(4)},
+                    row_boundaries=[Boundary(weight=1.0, pipeline_depth=2,
+                                             delay_ns=2.4)] * 3,
+                    max_util=max_util)
+
+
+def main():
+    for n in (2, 6, 10, 14):
+        graph = B.cnn(n)
+        grid = u250_grid()
+        base = analyze_timing(graph, grid, packed_placement(graph, grid))
+        plan = autobridge(graph, grid, max_util=0.75)
+        full = analyze_timing(graph, grid, plan.floorplan.placement,
+                              plan.depth)
+        # (b) pipeline depths computed from the floorplan, but placement is
+        # the packed one (constraints not passed downstream)
+        pipe_only = analyze_timing(graph, grid,
+                                   packed_placement(graph, grid), plan.depth)
+        # (c) floorplanned placement without pipelining
+        fp_only = analyze_timing(graph, grid, plan.floorplan.placement)
+        try:
+            plan4 = autobridge(graph, four_slot_grid(), max_util=0.75)
+            g4 = analyze_timing(graph, four_slot_grid(),
+                                plan4.floorplan.placement, plan4.depth)
+            g4v = f"{g4.fmax_mhz:.0f}" if g4.routed else "FAIL"
+        except Exception:
+            g4v = "INFEAS"
+        fmt = lambda r: f"{r.fmax_mhz:.0f}" if r.routed else "FAIL"
+        print(f"control,cnn_13x{n},0,"
+              f"baseline={fmt(base)} pipe_only={fmt(pipe_only)} "
+              f"fp_only={fmt(fp_only)} tapa={fmt(full)} four_slot={g4v}")
+
+
+if __name__ == "__main__":
+    main()

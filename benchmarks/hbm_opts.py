@@ -1,0 +1,59 @@
+"""Paper §7.4 Tables 8-10: HBM-specific optimizations.
+
+  Table 3 analogue : async_mmap vs mmap resource cost per channel
+  Tables 8/9       : the 5 HBM designs, mmap+packed vs async+TAPA
+  Table 10         : multi-floorplan generation (util sweep, all points)
+"""
+from __future__ import annotations
+
+from repro.core import (InfeasibleError, analyze_timing, autobridge,
+                        explore_floorplans, packed_placement)
+from repro.fpga import benchmarks as B, u280_grid
+from repro.fpga.benchmarks import ASYNC_IO, MMAP_IO
+
+
+def main():
+    print(f"hbm_opts,table3,0,mmap=LUT{MMAP_IO['LUT']:.0f}/"
+          f"FF{MMAP_IO['FF']:.0f}/BRAM{MMAP_IO['BRAM']:.0f} "
+          f"async=LUT{ASYNC_IO['LUT']:.0f}/FF{ASYNC_IO['FF']:.0f}/"
+          f"BRAM{ASYNC_IO['BRAM']:.0f} "
+          f"bram_saved_32ch={32*MMAP_IO['BRAM']:.0f}")
+
+    builders = {"sasa_v1": lambda a: B.sasa(1, a),
+                "sasa_v2": lambda a: B.sasa(2, a),
+                "spmm": B.spmm,
+                "spmv_a16": lambda a: B.spmv(20, a),
+                "spmv_a24": lambda a: B.spmv(28, a)}
+    grid = u280_grid()
+    for name, make in builders.items():
+        g_mmap = make(False)
+        base = analyze_timing(g_mmap, grid, packed_placement(g_mmap, grid))
+        g_async = make(True)
+        try:
+            plan = autobridge(g_async, grid, max_util=0.8)
+            opt = analyze_timing(g_async, grid, plan.floorplan.placement,
+                                 plan.depth)
+            o = (f"{opt.fmax_mhz:.0f}/{opt.hbm_clk_mhz:.0f}MHz"
+                 if opt.routed else "FAIL")
+        except InfeasibleError:
+            o = "INFEAS"
+        bram = lambda g: g.total_area().get("BRAM", 0)
+        bb = f"{base.fmax_mhz:.0f}/{base.hbm_clk_mhz:.0f}MHz" \
+            if base.routed else "FAIL"
+        print(f"hbm_opts,{name},0,orig={bb} opt={o} "
+              f"bram={bram(g_mmap):.0f}->{bram(g_async):.0f}")
+
+    # Table 10: the multi-floorplan Pareto sweep
+    for name in ("sasa_v1", "spmm", "spmv_a24"):
+        g = builders[name](True)
+        cands = explore_floorplans(g, u280_grid(),
+                                   utils=(0.6, 0.65, 0.7, 0.75, 0.8, 0.85))
+        pts = "/".join(f"{c.fmax:.0f}" if c.plan and c.report.routed
+                       else "Failed" for c in cands)
+        ok = [c.fmax for c in cands if c.plan and c.report.routed]
+        print(f"hbm_opts,multifloorplan_{name},0,points={pts}MHz "
+              f"max={max(ok) if ok else 0:.0f} min={min(ok) if ok else 0:.0f}")
+
+
+if __name__ == "__main__":
+    main()

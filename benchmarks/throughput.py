@@ -1,0 +1,31 @@
+"""Paper Tables 4-7 cycle columns: dataflow-simulated execution cycles,
+baseline vs TAPA-pipelined+balanced — throughput must be preserved
+(delta = fill/drain skew only, mirroring the paper's +10 cycles /1e5)."""
+from __future__ import annotations
+
+from repro.core import autobridge, simulate
+from repro.fpga import benchmarks as B, u250_grid, u280_grid
+
+
+def main():
+    designs = [
+        ("cnn_13x4", B.cnn(4), u250_grid()),
+        ("gaussian_12", B.gaussian(12), u250_grid()),
+        ("bucket_sort", B.bucket_sort(), u280_grid()),
+        ("page_rank", B.page_rank(), u280_grid()),
+        ("stencil_x4", B.stencil(4), u250_grid()),
+    ]
+    for name, graph, grid in designs:
+        plan = autobridge(graph, grid, max_util=0.75)
+        n = 300
+        base = simulate(graph, firings=n)
+        opt = simulate(graph, firings=n, latency=plan.depth)
+        assert not opt.deadlocked, name
+        print(f"throughput,{name},0,cycles_base={base.cycles} "
+              f"cycles_tapa={opt.cycles} "
+              f"delta={opt.cycles - base.cycles} "
+              f"overhead_bits={plan.area_overhead:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + greedy decode with KV caches on the
+reduced gemma3 (sliding-window ring caches exercised).
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess
+import sys
+
+for arch in ("gemma3-12b", "rwkv6-1.6b"):
+    subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                    "--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "48", "--gen", "12"], check=True)

@@ -1,0 +1,37 @@
+"""Config registry: ``get(name)`` / ``get_reduced(name)`` for every
+assigned architecture (plus the paper's own FPGA benchmark suite lives in
+``repro.fpga.benchmarks``)."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ArchConfig
+
+ARCHS = [
+    "arctic-480b", "granite-moe-3b-a800m", "llama-3.2-vision-11b",
+    "granite-8b", "gemma2-27b", "chatglm3-6b", "gemma3-12b", "zamba2-7b",
+    "whisper-tiny", "rwkv6-1.6b",
+]
+
+_MODULES = {
+    "arctic-480b": "arctic_480b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "granite-8b": "granite_8b",
+    "gemma2-27b": "gemma2_27b",
+    "chatglm3-6b": "chatglm3_6b",
+    "gemma3-12b": "gemma3_12b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+}
+
+
+def get(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.reduced()

@@ -1,0 +1,20 @@
+"""repro.core — the paper's contribution: task-parallel dataflow graphs,
+coarse-grained floorplanning co-optimized with compilation, throughput-safe
+latency balancing, and HBM/channel binding."""
+from .autobridge import Plan, autobridge
+from .balance import BalanceResult, CycleError, balance_graph, balance_latencies
+from .devicegrid import Boundary, SlotGrid
+from .floorplan import Floorplan, floorplan
+from .graph import Stream, Task, TaskGraph, TaskGraphBuilder
+from .explorer import Candidate, best_candidate, explore_floorplans
+from .fmax_model import PhysicalModel, TimingReport, analyze_timing, packed_placement
+from .ilp import InfeasibleError
+from .pipelining import PipelineAssignment, assign_pipelining
+from .simulate import SimResult, simulate
+
+__all__ = [
+    "Plan", "autobridge", "BalanceResult", "CycleError", "balance_graph",
+    "balance_latencies", "Boundary", "SlotGrid", "Floorplan", "floorplan",
+    "Stream", "Task", "TaskGraph", "TaskGraphBuilder", "InfeasibleError",
+    "PipelineAssignment", "assign_pipelining",
+]

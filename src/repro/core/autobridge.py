@@ -1,0 +1,119 @@
+"""AutoBridge orchestrator: floorplan -> pipeline -> balance, with the
+dependency-cycle feedback loop (paper Fig. 1 + §5.2).
+
+``autobridge()`` is the end-to-end co-optimization entry point used by both
+the FPGA reproduction and the TPU deployment:
+
+    plan = autobridge(graph, grid)
+    plan.floorplan.placement     # task -> slot
+    plan.depth["stream"]         # total inserted buffering (lat + balance)
+
+If the balancer reports a pipelined dependency cycle, the cycle's tasks are
+constrained into one slot and the floorplan is re-run (at most
+``max_feedback`` times), exactly mirroring the paper's behaviour on the
+page-rank benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .balance import BalanceResult, CycleError, balance_graph
+from .devicegrid import SlotGrid
+from .floorplan import Floorplan, floorplan
+from .graph import TaskGraph
+from .ilp import InfeasibleError
+from .pipelining import PipelineAssignment, assign_pipelining
+
+
+@dataclasses.dataclass
+class Plan:
+    graph: TaskGraph
+    floorplan: Floorplan
+    pipelining: PipelineAssignment
+    balancing: BalanceResult
+    #: total inserted depth per stream (pipelining + balancing)
+    depth: dict[str, int]
+    #: width-weighted total buffering overhead
+    area_overhead: float
+    feedback_rounds: int
+    co_located: list[set[str]]
+    #: streams demoted to latency-tolerant control as a cycle-breaking last
+    #: resort (empty in the common case)
+    demoted_streams: list[str] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> dict:
+        return {
+            "tasks": self.graph.num_tasks,
+            "streams": self.graph.num_streams,
+            "crossing_cost": self.floorplan.cost,
+            "pipelined_streams": sum(1 for v in self.depth.values() if v),
+            "area_overhead": self.area_overhead,
+            "feedback_rounds": self.feedback_rounds,
+        }
+
+
+def autobridge(graph: TaskGraph, grid: SlotGrid, *,
+               max_util: float | None = None,
+               same_slot: list[set[str]] = (),
+               seed: int = 0,
+               exact_threshold: int = 22,
+               n_starts: int = 8,
+               max_feedback: int = 8,
+               time_limit_s: float = 6.0) -> Plan:
+    co_located: list[set[str]] = [set(g) for g in same_slot]
+    demoted: set[str] = set()      # streams demoted to control (last resort)
+    pending_cycle: set[str] | None = None
+    for round_ in range(max_feedback + 1):
+        try:
+            fp = floorplan(graph, grid, max_util=max_util,
+                           same_slot=co_located, seed=seed,
+                           exact_threshold=exact_threshold,
+                           n_starts=n_starts, time_limit_s=time_limit_s)
+        except InfeasibleError:
+            if pending_cycle is None:
+                raise
+            # Co-locating the cycle made the floorplan infeasible (merged
+            # group too big for any slot).  Fall back: the cycle must close
+            # through a latency-tolerant handshake — demote its narrowest
+            # stream to a control stream and un-merge.
+            co_located = [g for g in co_located if g != pending_cycle]
+            cyc_streams = [s for s in graph.streams
+                           if s.src in pending_cycle and s.dst in pending_cycle
+                           and not s.control]
+            if not cyc_streams:
+                raise
+            narrowest = min(cyc_streams, key=lambda s: s.width)
+            narrowest.control = True
+            demoted.add(narrowest.name)
+            pending_cycle = None
+            continue
+        pending_cycle = None
+        pa = assign_pipelining(graph, fp)
+        try:
+            bal = balance_graph(graph, pa.lat)
+        except CycleError as err:
+            if round_ == max_feedback:
+                raise InfeasibleError(
+                    f"could not break pipelined cycle after {round_} rounds: "
+                    f"{err.cycle}") from err
+            # paper §5.2: constrain the cycle's vertices into the same slot
+            # and re-generate the floorplan.
+            cyc = set(err.cycle) & set(graph.tasks)
+            new_groups: list[set[str]] = []
+            for g in co_located:
+                if g & cyc:
+                    cyc |= g
+                else:
+                    new_groups.append(g)
+            new_groups.append(cyc)
+            co_located = new_groups
+            pending_cycle = cyc
+            continue
+        depth = {name: pa.lat[name] + bal.balance[name] for name in pa.lat}
+        width = {s.name: s.width for s in graph.streams}
+        overhead = sum(d * width[n] for n, d in depth.items())
+        return Plan(graph=graph, floorplan=fp, pipelining=pa, balancing=bal,
+                    depth=depth, area_overhead=overhead,
+                    feedback_rounds=round_, co_located=co_located,
+                    demoted_streams=sorted(demoted))
+    raise AssertionError("unreachable")

@@ -1,0 +1,66 @@
+"""Multi-floorplan candidate generation (paper §6.3).
+
+HBM designs trade local logic pressure against global routing pressure; the
+paper sweeps the per-slot max-utilization knob to generate a set of
+Pareto-optimal floorplans and implements all of them in parallel, keeping
+the best.  We do the same: sweep ``max_util``, run the full
+floorplan->pipeline->balance co-optimization for each value, score every
+candidate with the physical model (FPGA) or the roofline step-time model
+(TPU), and return all candidates sorted by score.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from .autobridge import Plan, autobridge
+from .devicegrid import SlotGrid
+from .fmax_model import PhysicalModel, TimingReport, analyze_timing
+from .graph import TaskGraph
+from .ilp import InfeasibleError
+
+
+@dataclasses.dataclass
+class Candidate:
+    max_util: float
+    plan: Plan | None
+    report: TimingReport | None
+    error: str | None = None
+
+    @property
+    def fmax(self) -> float:
+        return self.report.fmax_mhz if self.report else 0.0
+
+
+def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
+                       utils: tuple[float, ...] = (0.55, 0.60, 0.65, 0.70,
+                                                   0.75, 0.80, 0.85),
+                       seed: int = 0,
+                       model: PhysicalModel = PhysicalModel(),
+                       score: Callable[[Plan], TimingReport] | None = None,
+                       **ab_kwargs) -> list[Candidate]:
+    """Generate one candidate per max-util point ("implement all of them in
+    parallel", paper Table 10).  Infeasible points are kept as failed
+    candidates — the paper's Table 10 reports those as 'Failed'."""
+    out: list[Candidate] = []
+    for u in utils:
+        try:
+            plan = autobridge(graph, grid, max_util=u, seed=seed, **ab_kwargs)
+        except InfeasibleError as err:
+            out.append(Candidate(max_util=u, plan=None, report=None,
+                                 error=str(err)))
+            continue
+        if score is not None:
+            rep = score(plan)
+        else:
+            rep = analyze_timing(graph, grid, plan.floorplan.placement,
+                                 plan.depth, model)
+        out.append(Candidate(max_util=u, plan=plan, report=rep))
+    return out
+
+
+def best_candidate(cands: list[Candidate]) -> Candidate:
+    ok = [c for c in cands if c.plan is not None and c.report and c.report.routed]
+    if not ok:
+        raise InfeasibleError("no routable floorplan candidate")
+    return max(ok, key=lambda c: c.report.fmax_mhz)

@@ -1,0 +1,297 @@
+"""Calibrated physical-design surrogate (the "modeled Vivado").
+
+The paper evaluates against AMD/Xilinx Vivado, which we cannot run offline.
+This module is an explicit surrogate with the same qualitative behaviour,
+calibrated against the paper's §7 tables.  It is used *identically* for the
+baseline and the TAPA flow — only placement/pipelining inputs differ — so
+relative gains measure our algorithms, not the surrogate.
+
+Baseline flow model (``packed_placement``): the default tool packs connected
+logic into as few dies as possible (paper Figs. 3-4), filling each slot to
+``pack_util``; a task that almost fits is *split across the die boundary*
+("one kernel may be divided among multiple regions", Fig. 4) — recorded as a
+straddle.
+
+Timing model (``analyze_timing``):
+  T_slot     = t0 + alpha * u_slot^2                    (local congestion)
+  T_straddle = T_slot + die_delay                       (unregistered nets
+               of a split kernel cross the interposer)
+  T_edge     = t0/2 + sum(boundary delays) + congestion (unpipelined stream)
+  T_edge_pl  = t_reg + max_segment + t0/4               (pipelined stream)
+  Fmax = min(ceiling, 1000 / worst)
+
+Routability rules (calibrated to reproduce ~16/43 baseline failures):
+  R1 placement failure: any slot utilization > 1.0
+  R2 congestion failure: design uses >= ``dense_design_frac`` of the device
+     AND some slot is packed beyond ``dense_slot_util``  (dense multi-die
+     packing: big CNN/SODA/Gaussian configs)
+  R3 HBM failure: bottom-row (channel-adjacent) slots over ``hbm_row_util``
+     (HBM designs whose IO buffers crowd the bottom die)
+
+Known deviations from the paper (documented in EXPERIMENTS.md): the exact
+*set* of failing baselines differs (Vivado's routing failures are
+capricious, e.g. CNN 13x16 routes while 13x10 does not); the surrogate fails
+the largest/densest configurations instead.  Aggregate profile (counts and
+averages) matches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from .devicegrid import SlotGrid
+from .graph import TaskGraph, area_add
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalModel:
+    t0_ns: float = 1.8            # intrinsic logic+net delay (~550 MHz cap)
+    alpha_ns: float = 2.9         # congestion coefficient (T = t0 + a*u^2)
+    t_reg_ns: float = 0.35        # register hop
+    edge_scale: float = 0.42      # average routed fraction of worst-case
+                                  # wire+congestion delay on unregistered
+                                  # crossings (calibration, Table 4 orig)
+    fmax_ceiling_mhz: float = 500.0
+    pack_util: float = 0.87       # baseline packing density
+    straddle_min_frac: float = 0.30   # task splits if >=30% fits in the slot
+    straddle_fail_luts: float = 35e3  # R2b: straddle overflow that unroutes
+    dense_design_frac: float = 0.45   # R2: design size threshold
+    dense_slot_util: float = 0.85     # R2: packed slot threshold
+    hbm_row_util: float = 0.95        # R3
+    hbm_clk_mhz: float = 450.0
+
+    def local_delay(self, util: float) -> float:
+        return self.t0_ns + self.alpha_ns * max(util, 0.0) ** 2
+
+
+@dataclasses.dataclass
+class Placement:
+    """Placement + straddle annotations (baseline flow only)."""
+    slots: dict[str, tuple[int, int]]
+    #: tasks split across a die boundary: name -> overflow fraction
+    straddle: dict[str, float]
+
+
+@dataclasses.dataclass
+class TimingReport:
+    fmax_mhz: float            # 0.0 => placement/routing failure
+    routed: bool
+    fail_reason: str | None
+    critical_path_ns: float
+    slot_util: dict[tuple[int, int], float]
+    hbm_clk_mhz: float | None = None
+
+
+def _slot_utils(graph: TaskGraph, grid: SlotGrid,
+                placement: dict[str, tuple[int, int]]) -> dict[tuple[int, int], float]:
+    loads: dict[tuple[int, int], dict[str, float]] = {}
+    for name, slot in placement.items():
+        loads[slot] = area_add(loads.get(slot, {}), graph.tasks[name].area)
+    utils = {}
+    for slot, load in loads.items():
+        cap = grid.capacity(*slot, 1.0)
+        u = 0.0
+        for k, v in load.items():
+            if k in cap and cap[k] > 0 and not k.endswith("_channels"):
+                u = max(u, v / cap[k])
+        utils[slot] = u
+    return utils
+
+
+def _design_frac(graph: TaskGraph, grid: SlotGrid) -> float:
+    tot = graph.total_area()
+    frac = 0.0
+    dev: dict[str, float] = {}
+    for slot in grid.slots():
+        dev = area_add(dev, grid.capacity(*slot, 1.0))
+    for k, v in tot.items():
+        if k in dev and dev[k] > 0 and not k.endswith("_channels"):
+            frac = max(frac, v / dev[k])
+    return frac
+
+
+def analyze_timing(graph: TaskGraph, grid: SlotGrid,
+                   placement: dict[str, tuple[int, int]] | Placement,
+                   pipeline_lat: dict[str, int] | None = None,
+                   model: PhysicalModel = PhysicalModel()) -> TimingReport:
+    """Fmax/routability of a placed (optionally pipelined) design."""
+    if isinstance(placement, Placement):
+        slots_of = placement.slots
+        straddle = placement.straddle
+    else:
+        slots_of = placement
+        straddle = {}
+    lat = pipeline_lat or {}
+    utils = _slot_utils(graph, grid, slots_of)
+
+    # ---- R1: placement ----------------------------------------------------
+    for slot, u in utils.items():
+        if u > 1.0 + 1e-9:
+            return TimingReport(0.0, False, f"slot {slot} util {u:.2f} > 1.0",
+                                float("inf"), utils)
+
+    # ---- R2: dense multi-die congestion ------------------------------------
+    # hot slots are only unroutable when unregistered streams cross into
+    # them (TAPA pipelines every crossing, so its plans are immune; the
+    # baseline flow never pipelines)
+    frac = _design_frac(graph, grid)
+    if frac >= model.dense_design_frac:
+        hot = {s for s, u in utils.items() if u >= model.dense_slot_util}
+        if hot:
+            for s in graph.streams:
+                a, b = slots_of[s.src], slots_of[s.dst]
+                if a != b and lat.get(s.name, 0) <= 0 and (a in hot or b in hot):
+                    return TimingReport(
+                        0.0, False,
+                        f"routing congestion: design {frac:.0%} of device, "
+                        f"unregistered {s.name} into packed slot", float("inf"),
+                        utils)
+    # ---- R2b: a large kernel split across a die boundary is unroutable ----
+    for name, frac_over in straddle.items():
+        over = frac_over * graph.tasks[name].area.get("LUT", 0.0)
+        if over > model.straddle_fail_luts:
+            return TimingReport(
+                0.0, False,
+                f"routing congestion: kernel {name} split across dies "
+                f"({over/1e3:.0f}K LUT overflow)", float("inf"), utils)
+
+    # ---- R3: HBM bottom-row pressure ---------------------------------------
+    hbm_slots = [s for s in grid.slots()
+                 if grid.capacity(*s, 1.0).get("hbm_channels", 0) > 0]
+    hbm = None
+    if hbm_slots:
+        ub = max(utils.get(s, 0.0) for s in hbm_slots)
+        if ub > model.hbm_row_util:
+            return TimingReport(0.0, False,
+                                f"HBM row congestion: util {ub:.2f}",
+                                float("inf"), utils)
+        hbm = model.hbm_clk_mhz if ub <= 0.80 else max(
+            250.0, model.hbm_clk_mhz * (1.0 - 0.55 * (ub - 0.80)))
+
+    # ---- timing -------------------------------------------------------------
+    worst = 0.0
+    for slot, u in utils.items():
+        worst = max(worst, model.local_delay(u))
+    # monolithic kernels carry long internal paths HLS cannot retime well
+    # (paper 7.3: "avoid designing very large kernels")
+    slot_lut = {s: grid.capacity(*s, 1.0).get("LUT", 0.0) for s in grid.slots()}
+    for name, t in graph.tasks.items():
+        cap = slot_lut.get(slots_of[name], 0.0)
+        if cap > 0:
+            u_task = t.area.get("LUT", 0.0) / cap
+            worst = max(worst, model.t0_ns + model.alpha_ns * u_task)
+    # straddling kernels: unregistered internal nets cross the interposer
+    for name, frac_over in straddle.items():
+        slot = slots_of[name]
+        d = model.local_delay(utils.get(slot, 0.0))
+        d += grid.row_boundaries[min(slot[0], grid.rows - 2)].delay_ns \
+            if grid.rows > 1 else 0.0
+        worst = max(worst, d)
+    for s in graph.streams:
+        a, b = slots_of[s.src], slots_of[s.dst]
+        if a == b:
+            continue
+        wire = grid.crossing_delay_ns(a, b)
+        cong = 0.5 * ((model.local_delay(utils.get(a, 0.0)) - model.t0_ns)
+                      + (model.local_delay(utils.get(b, 0.0)) - model.t0_ns))
+        regs = lat.get(s.name, 0)
+        if regs <= 0:
+            t = 0.5 * model.t0_ns + model.edge_scale * (wire + cong)
+        else:
+            t = model.t_reg_ns + (wire + cong) / (regs + 1) + 0.25 * model.t0_ns
+        worst = max(worst, t)
+
+    fmax = min(model.fmax_ceiling_mhz, 1000.0 / worst)
+    return TimingReport(round(fmax, 1), True, None, worst, utils, hbm)
+
+
+def packed_placement(graph: TaskGraph, grid: SlotGrid,
+                     model: PhysicalModel = PhysicalModel()) -> Placement:
+    """Baseline-flow placement: BFS from IO-pinned tasks, packing each slot
+    to ``pack_util`` before spilling; almost-fitting tasks straddle."""
+    order: list[str] = []
+    seen: set[str] = set()
+    roots = sorted(graph.tasks, key=lambda n: (graph.tasks[n].pinned is None, n))
+    dq = deque()
+    for root in roots:
+        if root in seen:
+            continue
+        dq.append(root)
+        seen.add(root)
+        while dq:
+            n = dq.popleft()
+            order.append(n)
+            for s in graph.out_streams(n):
+                if s.dst not in seen:
+                    seen.add(s.dst)
+                    dq.append(s.dst)
+            for s in graph.in_streams(n):
+                if s.src not in seen:
+                    seen.add(s.src)
+                    dq.append(s.src)
+
+    # wirelength-driven tools pull logic toward the IO it talks to: fill
+    # from the slots owning the channel kinds this design uses
+    kinds = {k for t in graph.tasks.values() for k in t.area
+             if k.endswith("_channels")}
+    anchors = [sl for sl in grid.slots()
+               if any(grid.capacity(*sl, 1.0).get(k, 0) > 0 for k in kinds)]
+    if not anchors:
+        anchors = [(0, 0)]
+
+    def slot_key(rc):
+        d = min(abs(rc[0] - a[0]) + abs(rc[1] - a[1]) for a in anchors)
+        return (d, rc[1], rc[0])
+
+    slots = sorted(grid.slots(), key=slot_key)
+    loads: dict[tuple[int, int], dict[str, float]] = {s: {} for s in slots}
+    placement: dict[str, tuple[int, int]] = {}
+    straddle: dict[str, float] = {}
+
+    def headroom(slot, area, util):
+        """Smallest remaining fraction of `area` that fits in `slot`."""
+        cap = grid.capacity(*slot, 1.0)
+        cur = loads[slot]
+        frac = 1.0
+        for k, v in area.items():
+            if k in cap and v > 0:
+                limit = cap[k] if k.endswith("_channels") else cap[k] * util
+                frac = min(frac, max(0.0, (limit - cur.get(k, 0.0)) / v))
+        return frac
+
+    # strict fill order: pack the current slot full before moving on
+    # (wirelength-driven tools keep connected logic together, Figs. 3-4);
+    # an almost-fitting task is split across the boundary to the next slot.
+    ptr = 0
+    for n in order:
+        t = graph.tasks[n]
+        if t.pinned is not None:
+            placement[n] = t.pinned
+            loads[t.pinned] = area_add(loads[t.pinned], t.area)
+            continue
+        placed = False
+        for i in range(ptr, len(slots)):
+            f = headroom(slots[i], t.area, model.pack_util)
+            if f >= 1.0 - 1e-9:
+                placement[n] = slots[i]
+                loads[slots[i]] = area_add(loads[slots[i]], t.area)
+                ptr = i
+                placed = True
+                break
+            if f >= model.straddle_min_frac and i + 1 < len(slots):
+                slot, nxt = slots[i], slots[i + 1]
+                placement[n] = slot
+                loads[slot] = area_add(
+                    loads[slot], {k: v * f for k, v in t.area.items()})
+                loads[nxt] = area_add(
+                    loads[nxt], {k: v * (1 - f) for k, v in t.area.items()})
+                straddle[n] = 1.0 - f
+                ptr = i + 1
+                placed = True
+                break
+        if not placed:
+            # spill to the least-loaded slot (may violate R1 -> fail)
+            slot = min(slots, key=lambda s: sum(loads[s].values()))
+            placement[n] = slot
+            loads[slot] = area_add(loads[slot], t.area)
+    return Placement(slots=placement, straddle=straddle)

@@ -1,0 +1,2 @@
+from .pipeline import SyntheticTokens, MemmapTokens, ShardedLoader
+__all__ = ["SyntheticTokens", "MemmapTokens", "ShardedLoader"]

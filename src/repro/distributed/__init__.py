@@ -1,0 +1,1 @@
+"""Distributed runtime: floorplan-driven sharding + pipeline execution."""

@@ -1,0 +1,57 @@
+"""Distributed-optimization tricks: int8 error-feedback gradient
+compression for the DP all-reduce, and compute/comm overlap notes.
+
+Compression: before the data-parallel gradient reduction, quantize each
+leaf to int8 with a per-leaf scale; the quantization residual is carried
+in an error-feedback buffer and added back next step (Karimireddy et al.,
+the standard trick that keeps SGD/Adam convergence).  On the wire this
+cuts the DP all-reduce bytes 4x vs f32 / 2x vs bf16 — directly shrinking
+the collective roofline term of DP-bound steps.
+
+Overlap: XLA already overlaps the (async) all-reduce with the backward
+compute when the reduction is emitted per-layer (scan-over-groups does
+this naturally — one gradient segment per group finishes early).  The
+latency-hiding an FPGA gets from registering a long wire, a TPU gets from
+double-buffered collectives: same TAPA story, different substrate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, error_buf):
+    """Quantize grads+residual to int8; returns (q_tree, scales, new_err)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return (q, s), gf - deq
+    qs = jax.tree.map(one, grads, error_buf)
+    q_tree = jax.tree.map(lambda t: t[0][0], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[0][1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    e_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return q_tree, s_tree, e_tree
+
+
+def decompress_grads(q_tree, s_tree):
+    return jax.tree.map(dequantize_int8, q_tree, s_tree)
+
+
+def init_error_buf(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)

@@ -1,0 +1,5 @@
+"""FPGA-side reproduction: devices (U250/U280) and the paper's benchmarks."""
+from .archs import u250_grid, u280_grid
+from . import benchmarks
+
+__all__ = ["u250_grid", "u280_grid", "benchmarks"]

@@ -1,0 +1,64 @@
+"""Device grids for the two boards used in the paper (§2.3, §7.1).
+
+  * Alveo U250: 4 dies (SLRs) stacked vertically, DDR/IO column in the
+    middle -> 2 cols x 4 rows = 8 slots.  Totals (paper footnote 2):
+    5376 BRAM18K, 12288 DSP48E, 3456K FF, 1728K LUT.
+  * Alveo U280: 3 dies + HBM (32 channels) along the bottom edge ->
+    2 cols x 3 rows = 6 slots.  Totals (footnote 3): 4032 BRAM18K,
+    9024 DSP48E, 2607K FF, ~1303K LUT (the footnote's "434K" is the
+    per-slot FF figure; we use the physical 1303K total).
+
+Boundary delays: SLR (die) crossings carry the large interposer penalty;
+the middle IO column detours routes with a smaller penalty (paper §2.3).
+"""
+from __future__ import annotations
+
+from repro.core import Boundary, SlotGrid
+
+# vertical die boundaries: expensive; 2 register levels per crossing
+_DIE = lambda: Boundary(weight=1.0, pipeline_depth=2, delay_ns=2.4)
+# the middle IO/DDR column: cheaper but real
+_IOCOL = lambda: Boundary(weight=1.0, pipeline_depth=2, delay_ns=1.6)
+
+
+def u250_grid(max_util: float = 0.70, ddr_channels_per_row: int = 1) -> SlotGrid:
+    rows, cols = 4, 2
+    cap = {
+        "LUT": 1728e3 / (rows * cols),
+        "FF": 3456e3 / (rows * cols),
+        "BRAM": 5376 / (rows * cols),
+        "DSP": 12288 / (rows * cols),
+        "URAM": 1280 / (rows * cols),
+    }
+    # one DDR controller per die, adjacent to the middle column (col 0
+    # side); each controller exposes multiple AXI ports via the platform
+    # interconnect
+    slot_caps = {(r, 0): {"ddr_channels": 4.0 * ddr_channels_per_row}
+                 for r in range(rows)}
+    return SlotGrid("U250", rows=rows, cols=cols, base_capacity=cap,
+                    slot_caps=slot_caps,
+                    row_boundaries=[_DIE() for _ in range(rows - 1)],
+                    col_boundaries=[_IOCOL() for _ in range(cols - 1)],
+                    max_util=max_util)
+
+
+def u280_grid(max_util: float = 0.70) -> SlotGrid:
+    rows, cols = 3, 2
+    cap = {
+        "LUT": 1303e3 / (rows * cols),
+        "FF": 2607e3 / (rows * cols),
+        "BRAM": 4032 / (rows * cols),
+        "DSP": 9024 / (rows * cols),
+        "URAM": 960 / (rows * cols),
+    }
+    # 32 HBM channels across the bottom row (16 per bottom slot);
+    # 2 DDR DIMMs near the top die
+    slot_caps = {(0, 0): {"hbm_channels": 16.0},
+                 (0, 1): {"hbm_channels": 16.0},
+                 (2, 0): {"ddr_channels": 4.0},
+                 (2, 1): {"ddr_channels": 4.0}}
+    return SlotGrid("U280", rows=rows, cols=cols, base_capacity=cap,
+                    slot_caps=slot_caps,
+                    row_boundaries=[_DIE() for _ in range(rows - 1)],
+                    col_boundaries=[_IOCOL() for _ in range(cols - 1)],
+                    max_util=max_util)

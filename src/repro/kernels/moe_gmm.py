@@ -1,0 +1,81 @@
+"""Grouped (per-expert) matmul for MoE FFNs.
+
+Tokens are pre-sorted by expert (standard MoE dispatch); the kernel tiles
+the token stream (Tb x K) and sweeps experts on the trailing sequential
+grid axis, accumulating ``mask(token in expert e) * (x_tile @ w[e])`` into
+the output tile.  Because group ids are sorted, each token tile overlaps
+O(1) experts — every other (tile, expert) pair is skipped via ``pl.when``
+on a per-tile expert-range check before any compute or weight DMA, so the
+effective work is O(T/Tb + E) tiles, the megablocks bound.
+
+Tiling: x (Tb=128, K), w (K, N) per expert, out (Tb, N) revisited across
+the expert axis (TPU grids are sequential, so accumulation in the output
+block is safe).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TB = 128
+
+
+def _kernel(gid_ref, x_ref, w_ref, o_ref, *, tb, n_exp):
+    t = pl.program_id(0)
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # expert range present in this token tile (sorted ids: check endpoints)
+    lo = gid_ref[t * tb]
+    hi = gid_ref[t * tb + tb - 1]
+
+    @pl.when(jnp.logical_and(lo <= e, e <= hi))
+    def _body():
+        x = x_ref[...].astype(jnp.float32)                  # (Tb, K)
+        w = w_ref[0].astype(jnp.float32)                    # (K, N)
+        ids = jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0) + t * tb
+        mask = jnp.zeros((tb, 1), jnp.float32)
+        # gid lookup from SMEM (scalar stream)
+        rows = jnp.stack([gid_ref[t * tb + i] for i in range(tb)])
+        mask = (rows == e).astype(jnp.float32)[:, None]
+        o_ref[...] += (mask * jax.lax.dot(x, w)).astype(o_ref.dtype)
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, group_ids: jax.Array, *,
+            tb: int = DEFAULT_TB, interpret: bool = False) -> jax.Array:
+    """x: (T, K); w: (E, K, N); group_ids: (T,) sorted -> (T, N)."""
+    T, K = x.shape
+    E, _, N = w.shape
+    tb = min(tb, max(8, 1 << max(T - 1, 1).bit_length()))
+    Tp = -(-T // tb) * tb
+    Kp = max(128, -(-K // 128) * 128)
+    Np = max(128, -(-N // 128) * 128)
+    xp = jnp.pad(x, ((0, Tp - T), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+    # padded tokens route to a sentinel expert id that never matches
+    gids = jnp.pad(group_ids.astype(jnp.int32), (0, Tp - T),
+                   constant_values=E + 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Tp // tb, E),
+        in_specs=[
+            pl.BlockSpec((tb, Kp), lambda t, e, g: (t, 0)),
+            pl.BlockSpec((1, Kp, Np), lambda t, e, g: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, Np), lambda t, e, g: (t, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, tb=tb, n_exp=E),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, Np), x.dtype),
+        interpret=interpret,
+    )(gids, xp, wp)
+    return out[:T, :N]

@@ -1,0 +1,78 @@
+"""Jitted dispatch wrappers over the Pallas kernels and their references.
+
+The model layer calls these; ``impl`` selects the backend:
+
+  * "ref"     — pure-jnp oracle (XLA-compiled; used on CPU and for the
+                dry-run lowering, where XLA's fusion already does well)
+  * "pallas"  — the TPU Pallas kernel (interpret=True on CPU for tests)
+
+Default comes from ``repro.kernels.DEFAULT_IMPL`` (env ``REPRO_KERNEL_IMPL``).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from . import ref as _ref
+
+DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "ref")
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "auto")
+
+
+def _interpret() -> bool:
+    if _INTERPRET == "auto":
+        return jax.default_backend() != "tpu"
+    return _INTERPRET == "1"
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+              q_offset=0, kv_len=None, impl=None):
+    impl = impl or DEFAULT_IMPL
+    if impl == "pallas" and q.shape[1] > 1:
+        from . import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  q_offset=q_offset, kv_len=kv_len,
+                                  interpret=_interpret())
+    if impl == "pallas":  # single-token decode
+        from . import flash_attention as fa
+        return fa.decode_attention(q, k, v, softcap=softcap, scale=scale,
+                                   q_offset=q_offset, kv_len=kv_len,
+                                   window=window, interpret=_interpret())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale,
+                              q_offset=q_offset, kv_len=kv_len)
+
+
+def mamba2_scan(x, dt, A, B, C, state=None, *, impl=None):
+    impl = impl or DEFAULT_IMPL
+    if impl == "pallas":
+        from . import mamba2_scan as m2
+        return m2.mamba2_scan(x, dt, A, B, C, state, interpret=_interpret())
+    return _ref.mamba2_scan_ref(x, dt, A, B, C, state)
+
+
+def rwkv6_scan(r, k, v, w, u, state=None, *, impl=None):
+    impl = impl or DEFAULT_IMPL
+    if impl == "pallas":
+        from . import rwkv6_scan as r6
+        return r6.rwkv6_scan(r, k, v, w, u, state, interpret=_interpret())
+    return _ref.rwkv6_scan_ref(r, k, v, w, u, state)
+
+
+def burst_gather(table, idx, *, impl=None):
+    impl = impl or DEFAULT_IMPL
+    if impl == "pallas":
+        from . import burst_gather as bg
+        return bg.burst_gather(table, idx, interpret=_interpret())
+    return _ref.burst_gather_ref(table, idx)
+
+
+def moe_gmm(x, w, group_ids, *, impl=None):
+    impl = impl or DEFAULT_IMPL
+    if impl == "pallas":
+        from . import moe_gmm as gmm
+        return gmm.moe_gmm(x, w, group_ids, interpret=_interpret())
+    return _ref.moe_gmm_ref(x, w, group_ids)

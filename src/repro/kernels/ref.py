@@ -1,0 +1,177 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the semantics contract: ``kernels/<name>.py`` (Pallas) must match
+these bit-for-bit (up to dtype tolerance) across the shape/dtype sweeps in
+``tests/test_kernels_*.py``.  The model layer calls ``kernels.ops`` which
+dispatches to either implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal, sliding window, logit softcap)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: int | None = None,
+                  softcap: float | None = None,
+                  scale: float | None = None,
+                  q_offset: int = 0,
+                  kv_len: jax.Array | None = None) -> jax.Array:
+    """Multi-head attention with grouped KV heads.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: optional (B,) valid KV lengths (ragged decode batches).
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # (B, Hkv, g, Sq, Skv)
+    logits = jnp.einsum("bqhd,bkhd->bhqk",
+                        qf.reshape(B, Sq, Hkv, g, D).reshape(B, Sq, Hkv * g, D),
+                        jnp.repeat(kf, g, axis=2))
+    logits = logits.reshape(B, Hkv * g, Sq, Skv)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    qpos = q_offset + jnp.arange(Sq)[:, None]          # (Sq, 1)
+    kpos = jnp.arange(Skv)[None, :]                    # (1, Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    mask = mask[None, None]
+    if kv_len is not None:
+        mask = mask & (kpos[None, None] < kv_len[:, None, None, None])
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    # rows with no valid key (fully masked) produce NaN-free zeros:
+    p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, jnp.repeat(vf, g, axis=2))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 (SSD) chunked scan
+# ---------------------------------------------------------------------------
+
+def mamba2_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B_: jax.Array, C: jax.Array,
+                    state: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """SSD recurrence (Mamba-2), sequential reference.
+
+    x:  (B, S, H, P)   — input heads (P = head dim)
+    dt: (B, S, H)      — positive step sizes (post-softplus)
+    A:  (H,)           — negative decay rates
+    B_: (B, S, N)      — input projection (shared across heads)
+    C:  (B, S, N)      — output projection
+    state: (B, H, P, N) initial state (None = zeros)
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t B_t^T ;  y_t = h_t C_t
+    """
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B_.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def step(h, t):
+        decay = jnp.exp(dtf[:, t] * Af[None, :])           # (B, H)
+        dx = dtf[:, t][..., None] * xf[:, t]               # (B, H, P)
+        upd = dx[..., None] * Bf[:, t][:, None, None, :]   # (B, H, P, N)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)                              # (B, S, H, P)
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 (Finch) recurrence
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array,
+                   w: jax.Array, u: jax.Array,
+                   state: jax.Array | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 WKV recurrence with data-dependent decay, sequential ref.
+
+    r, k, v: (B, S, H, D); w: (B, S, H, D) decay in (0,1) (= exp(-exp(w_raw)));
+    u: (H, D) bonus.  state: (B, H, D, D) (None = zeros).
+    Returns (y: (B, S, H, D), final state).
+
+      y_t = r_t . (S + u * k_t^T v_t);   S = diag(w_t) S + k_t^T v_t
+    """
+    B, S, H, D = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    s0 = (jnp.zeros((B, H, D, D), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def step(s, t):
+        kv = kf[:, t][..., :, None] * vf[:, t][..., None, :]   # (B,H,D,D)
+        y = jnp.einsum("bhd,bhde->bhe", rf[:, t], s + uf[None, :, :, None] * kv)
+        s = wf[:, t][..., :, None] * s + kv
+        return s, y
+
+    s, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)
+    return y.astype(r.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# burst gather (the paper's async_mmap + burst detector, §3.4)
+# ---------------------------------------------------------------------------
+
+def burst_gather_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather rows of ``table`` at ``idx``.
+
+    table: (R, D); idx: (N,) int32 -> (N, D).  The Pallas kernel streams the
+    index vector through a run-length burst detector and issues one block
+    DMA per run of consecutive indices (the TPU analogue of merging
+    sequential AXI reads into burst transactions).  Semantics are a plain
+    gather.
+    """
+    return jnp.take(table, idx, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul (expert FFN applied per routed token)
+# ---------------------------------------------------------------------------
+
+def moe_gmm_ref(x: jax.Array, w: jax.Array, group_ids: jax.Array) -> jax.Array:
+    """Grouped matmul: x[i] @ w[group_ids[i]].
+
+    x: (T, K); w: (E, K, N); group_ids: (T,) in [0, E) -> (T, N).
+    The Pallas kernel assumes ``group_ids`` is sorted (tokens grouped by
+    expert, standard MoE dispatch) and tiles over experts; the reference is
+    a one-hot einsum.
+    """
+    T, K = x.shape
+    E = w.shape[0]
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    onehot = jax.nn.one_hot(group_ids, E, dtype=jnp.float32)   # (T, E)
+    # (T, E) x (E, K, N) x (T, K) -> (T, N)
+    y = jnp.einsum("te,tk,ekn->tn", onehot, xf, wf)
+    return y.astype(x.dtype)

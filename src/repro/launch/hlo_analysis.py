@@ -1,0 +1,106 @@
+"""Collective extraction from compiled HLO text (for §Roofline).
+
+cost_analysis() has no collective-bytes entry, so we parse the HLO:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes ring-model wire bytes per participating
+device, classified ICI vs DCN by whether its replica groups (or permute
+pairs) cross a pod boundary (device id // pod_size).
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the instruction's RESULT shape (before '= op(...)')"""
+    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split("(", 1)[0]
+    return _shape_bytes(lhs)
+
+
+def _parse_groups(line: str) -> list[list[int]] | None:
+    m = re.search(r"replica_groups=\{([^}]*(?:\},\{[^}]*)*)\}\}", line)
+    if m:
+        txt = m.group(0)[len("replica_groups={"):-1]
+        groups = []
+        for g in re.findall(r"\{([\d, ]*)\}", "{" + txt + "}"):
+            if g.strip():
+                groups.append([int(x) for x in g.replace(" ", "").split(",")])
+        return groups or None
+    # compact iota form: replica_groups=[G,n]<=[d0,d1,...]T(p...)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                  r"(?:T\(([\d,]+)\))?", line)
+    if m:
+        G, n = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(G, n).tolist()
+    return None
+
+
+def _permute_pairs(line: str) -> list[tuple[int, int]]:
+    m = re.search(r"source_target_pairs=\{([^}]*)\}", line)
+    if not m:
+        return []
+    return [tuple(int(x) for x in p.split(","))
+            for p in re.findall(r"\{(\d+,\d+)\}", "{" + m.group(1) + "}")]
+
+
+def collective_summary(hlo: str, *, pod_size: int) -> dict:
+    """Ring-model wire bytes per device, ICI vs DCN classified."""
+    out = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "ops": {},
+           "count": 0}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w\.\-]+ = .*?(all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start)?\(", ls)
+        if not m or "-done" in ls.split("(")[0]:
+            continue
+        op = m.group(1)
+        size = _result_bytes(ls)
+        if op == "collective-permute":
+            pairs = _permute_pairs(ls)
+            crosses = any(a // pod_size != b // pod_size for a, b in pairs)
+            wire = float(size)
+            n = 2
+        else:
+            groups = _parse_groups(ls)
+            n = len(groups[0]) if groups else 1
+            if n <= 1:
+                continue
+            crosses = bool(groups) and any(
+                len({d // pod_size for d in g}) > 1 for g in groups)
+            if op == "all-reduce":
+                wire = 2.0 * size * (n - 1) / n
+            elif op == "all-gather":
+                wire = float(size) * (n - 1) / n   # size = gathered result
+            else:  # reduce-scatter (result is the scattered piece), a2a
+                wire = float(size) * (n - 1)
+        key = "dcn_bytes" if crosses else "ici_bytes"
+        out[key] += wire
+        out["ops"][op] = out["ops"].get(op, 0) + 1
+        out["count"] += 1
+    return out

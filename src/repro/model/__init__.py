@@ -1,0 +1,1 @@
+"""Model zoo: layers + assembly for the 10 assigned architectures."""

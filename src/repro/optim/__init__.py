@@ -1,0 +1,9 @@
+"""Optimizers: AdamW + Adafactor (for >=100B MoE memory budgets), gradient
+clipping, schedules, ZeRO-1 sharding specs."""
+from .adamw import adamw_init, adamw_update
+from .adafactor import adafactor_init, adafactor_update
+from .common import clip_by_global_norm, cosine_schedule, zero1_specs
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "clip_by_global_norm", "cosine_schedule",
+           "zero1_specs"]

@@ -1,0 +1,52 @@
+"""Adafactor (factored second moment, no first moment): ~2.6 B/param —
+the only way a 480B-param MoE trains on a 256-chip v5e pod (DESIGN.md §6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def one(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(one, params,
+                              is_leaf=lambda x: not isinstance(x, (dict, list))),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, *, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0):
+    step = state["step"] + 1
+    beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p.shape):
+            vr = beta * v["vr"] + (1 - beta) * g2.mean(-1)
+            vc = beta * v["vc"] + (1 - beta) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+            u = gf * jax.lax.rsqrt(denom + eps)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta * v["v"] + (1 - beta) * g2}
+            u = gf * jax.lax.rsqrt(nv["v"] + eps)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in outs])
+    new_v = tdef.unflatten([o[1] for o in outs])
+    return new_p, {"v": new_v, "step": step}

@@ -1,0 +1,57 @@
+"""Shared optimizer utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(step, *, peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 *
+                  (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def zero1_specs(param_specs_tree, param_structs=None, *,
+                data_axes=("pod", "data"), data_size: int = 1):
+    """ZeRO-1: optimizer-state leaves additionally sharded over the data
+    axes, on the largest unsharded dimension divisible by the data size."""
+    def shard_one(spec, leaf=None):
+        parts = list(tuple(spec))
+        if leaf is not None:
+            parts += [None] * (leaf.ndim - len(parts))
+        best, best_size = None, -1
+        for i, p in enumerate(parts):
+            if p is not None:
+                continue
+            if leaf is None:
+                best = i
+                break
+            size = leaf.shape[i]
+            if size % max(data_size, 1) == 0 and size > best_size:
+                best, best_size = i, size
+        if best is None:
+            return P(*parts)
+        parts[best] = data_axes
+        return P(*parts)
+
+    if param_structs is None:
+        return jax.tree.map(shard_one, param_specs_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+    flat_specs, tdef = jax.tree.flatten(
+        param_specs_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_leaves = tdef.flatten_up_to(param_structs)
+    return tdef.unflatten([shard_one(s, l)
+                           for s, l in zip(flat_specs, flat_leaves)])

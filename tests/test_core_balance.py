@@ -1,0 +1,105 @@
+"""SDC latency balancing: exactness vs brute force, the paper's Fig. 9
+worked example, and cycle detection."""
+import itertools
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import CycleError, balance_latencies
+
+
+def brute_force_balance(edges, s_max):
+    """Exhaustive search over integer potentials (tiny graphs only)."""
+    nodes = sorted({n for _, s, d, _, _ in edges for n in (s, d)})
+    best = None
+    for vals in itertools.product(range(s_max + 1), repeat=len(nodes)):
+        S = dict(zip(nodes, vals))
+        ok = all(S[s] - S[d] >= lat for _, s, d, lat, _ in edges)
+        if not ok:
+            continue
+        obj = sum(w * (S[s] - S[d] - lat) for _, s, d, lat, w in edges)
+        if best is None or obj < best:
+            best = obj
+    return best
+
+
+def test_paper_fig9_example():
+    edges = [
+        ("e12", "v1", "v2", 0, 1), ("e13", "v1", "v3", 1, 1),
+        ("e14", "v1", "v4", 0, 2), ("e15", "v1", "v5", 0, 1),
+        ("e16", "v1", "v6", 0, 1),
+        ("e27", "v2", "v7", 1, 1), ("e37", "v3", "v7", 1, 1),
+        ("e47", "v4", "v7", 0, 1), ("e57", "v5", "v7", 0, 1),
+        ("e67", "v6", "v7", 0, 1),
+    ]
+    res = balance_latencies(edges)
+    # paper: +2 on each of e47/e57/e67 and +1 on the v2 path => overhead 7,
+    # crucially NOT placed on the width-2 edge e14.
+    assert res.overhead == 7
+    assert res.balance["e14"] == 0
+    assert res.balance["e47"] == 2
+    # every reconvergent v1->v7 path must now carry equal latency
+    for via, e_in, e_out in [("v2", "e12", "e27"), ("v3", "e13", "e37"),
+                             ("v4", "e14", "e47"), ("v5", "e15", "e57"),
+                             ("v6", "e16", "e67")]:
+        lat = dict((n, l) for n, _, _, l, _ in edges)
+        total = (lat[e_in] + res.balance[e_in]
+                 + lat[e_out] + res.balance[e_out])
+        assert total == 2
+
+
+def test_diamond():
+    edges = [("ab", "a", "b", 3, 1), ("bd", "b", "d", 0, 1),
+             ("ad", "a", "d", 0, 4)]
+    res = balance_latencies(edges)
+    # balancing 3 units: on 'ad' costs 12; optimal is forced (only path)
+    assert res.balance["ad"] == 3
+    assert res.overhead == 12
+
+
+def test_parallel_streams_same_pair():
+    # two streams between the same tasks with different pipelining
+    edges = [("s1", "a", "b", 2, 1), ("s2", "a", "b", 0, 1)]
+    res = balance_latencies(edges)
+    assert res.balance["s1"] == 0
+    assert res.balance["s2"] == 2
+
+
+def test_positive_cycle_raises():
+    edges = [("ab", "a", "b", 1, 1), ("ba", "b", "a", 0, 1)]
+    with pytest.raises(CycleError):
+        balance_latencies(edges)
+
+
+def test_zero_cycle_feasible():
+    edges = [("ab", "a", "b", 0, 1), ("ba", "b", "a", 0, 1),
+             ("bc", "b", "c", 2, 1)]
+    res = balance_latencies(edges)
+    assert res.balance["ab"] == 0 and res.balance["ba"] == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(3, 6), st.integers(2, 9), st.integers(0, 99999))
+def test_property_matches_brute_force(n, m, seed):
+    rng = np.random.default_rng(seed)
+    # random DAG on n nodes
+    edges = []
+    for j in range(m):
+        u, v = sorted(rng.integers(0, n, size=2).tolist())
+        if u == v:
+            continue
+        edges.append((f"e{j}", f"v{u}", f"v{v}",
+                      int(rng.integers(0, 3)), int(rng.integers(1, 5))))
+    if not edges:
+        return
+    res = balance_latencies(edges)
+    # feasibility + non-negativity
+    for name, s, d, lat, w in edges:
+        assert res.potentials[s] - res.potentials[d] >= lat
+        assert res.balance[name] >= 0
+    # optimality vs exhaustive search over small potential range
+    max_lat = sum(l for _, _, _, l, _ in edges)
+    ref = brute_force_balance(edges, s_max=max_lat)
+    assert res.overhead == pytest.approx(ref)

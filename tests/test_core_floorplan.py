@@ -1,0 +1,179 @@
+"""Floorplanner + autobridge orchestration + throughput simulation tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Boundary, SlotGrid, TaskGraphBuilder, autobridge,
+                        floorplan, simulate)
+from repro.core.ilp import InfeasibleError
+
+
+def chain_graph(n, area=100, width=256):
+    b = TaskGraphBuilder("chain")
+    for i in range(n - 1):
+        b.stream(f"s{i}", width=width)
+    for i in range(n):
+        b.invoke(f"K{i}", area={"LUT": area},
+                 ins=[f"s{i-1}"] if i > 0 else [],
+                 outs=[f"s{i}"] if i < n - 1 else [])
+    return b.build()
+
+
+def test_chain_snakes_through_grid():
+    g = chain_graph(8)
+    grid = SlotGrid("g", rows=4, cols=2, base_capacity={"LUT": 150},
+                    max_util=1.0)
+    plan = autobridge(g, grid)
+    # a chain of 8 across 8 slots of capacity 1.5 tasks each must use all 8
+    # slots, and the optimal tour has exactly 7 boundary crossings.
+    assert plan.floorplan.cost == 7 * 256
+    slots = set(plan.floorplan.placement.values())
+    assert len(slots) == 8
+    # every cross-slot edge is pipelined with 2 regs per crossing
+    assert all(d == 2 for d in plan.pipelining.lat.values())
+
+
+def test_capacity_respected():
+    g = chain_graph(4, area=100)
+    grid = SlotGrid("g", rows=2, cols=1, base_capacity={"LUT": 250},
+                    max_util=1.0)
+    fp = floorplan(g, grid)
+    loads = {}
+    for name, slot in fp.placement.items():
+        loads[slot] = loads.get(slot, 0) + 100
+    assert all(v <= 250 for v in loads.values())
+
+
+def test_infeasible_raises():
+    g = chain_graph(4, area=100)
+    grid = SlotGrid("g", rows=2, cols=1, base_capacity={"LUT": 150},
+                    max_util=1.0)
+    with pytest.raises(InfeasibleError):
+        floorplan(g, grid)
+
+
+def test_pinning_honored():
+    b = TaskGraphBuilder("pin")
+    b.stream("s0", width=8)
+    b.invoke("IO", area={"LUT": 10, "hbm_channels": 1}, outs=["s0"],
+             pinned=(0, 1))
+    b.invoke("C", area={"LUT": 10}, ins=["s0"])
+    g = b.build()
+    grid = SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 100},
+                    slot_caps={(0, 1): {"hbm_channels": 2}}, max_util=1.0)
+    fp = floorplan(g, grid)
+    assert fp.placement["IO"] == (0, 1)
+    assert fp.placement["C"] == (0, 1)  # width pulls C next to IO
+
+
+def test_hbm_channel_binding_as_resource():
+    """Paper §6.2: HBM channels are a slot resource owned by row 0 only."""
+    b = TaskGraphBuilder("hbm")
+    for i in range(4):
+        b.stream(f"s{i}", width=512)
+    for i in range(4):
+        b.invoke("IO", area={"LUT": 10, "hbm_channels": 1}, outs=[f"s{i}"])
+        b.invoke("PE", area={"LUT": 10}, ins=[f"s{i}"])
+    g = b.build()
+    grid = SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 1000},
+                    slot_caps={(0, 0): {"hbm_channels": 2},
+                               (0, 1): {"hbm_channels": 2}}, max_util=1.0)
+    fp = floorplan(g, grid)
+    for i in range(4):
+        name = f"IO_{i}" if i else "IO"
+        assert fp.placement[name][0] == 0, "IO must bind to HBM row"
+
+
+def test_weighted_boundaries_prefer_cheap_crossings():
+    """Pod (DCN) boundary is 8x the ICI boundary cost: the cut should go
+    through the cheap one."""
+    b = TaskGraphBuilder("w")
+    b.stream("s0", width=100)
+    b.invoke("A", area={"LUT": 100}, outs=["s0"])
+    b.invoke("B", area={"LUT": 100}, ins=["s0"])
+    g = b.build()
+    grid = SlotGrid("tpu", rows=2, cols=2, base_capacity={"LUT": 110},
+                    row_boundaries=[Boundary(weight=8.0)],
+                    col_boundaries=[Boundary(weight=1.0)], max_util=1.0)
+    fp = floorplan(g, grid)
+    a, bb = fp.placement["A"], fp.placement["B"]
+    assert a[0] == bb[0] and a[1] != bb[1], (a, bb)
+
+
+# ---------------------------------------------------------------------------
+# throughput preservation (the paper's central claim, via simulation)
+# ---------------------------------------------------------------------------
+
+def test_simulate_chain_throughput():
+    g = chain_graph(4, width=32)
+    base = simulate(g, firings=100)
+    piped = simulate(g, firings=100, latency={"s0": 2, "s1": 2, "s2": 2})
+    assert not base.deadlocked and not piped.deadlocked
+    # latency adds only fill/drain skew, not steady-state cycles
+    assert piped.cycles - base.cycles <= 6 + 1
+
+
+def test_simulate_unbalanced_vs_balanced_diamond():
+    b = TaskGraphBuilder("d")
+    for s in ("ab", "bd", "ad"):
+        b.stream(s, width=32, depth=2)
+    b.invoke("A", area={}, outs=["ab", "ad"])
+    b.invoke("B", area={}, ins=["ab"], outs=["bd"])
+    b.invoke("D", area={}, ins=["bd", "ad"])
+    g = b.build()
+    base = simulate(g, firings=200)
+    unbal = simulate(g, firings=200, latency={"ab": 4, "bd": 4})
+    bal = simulate(g, firings=200, latency={"ab": 4, "bd": 4, "ad": 8})
+    # unbalanced pipelining stalls the source through the shallow skip FIFO
+    assert unbal.cycles > 1.5 * base.cycles
+    # balanced depths restore full throughput: ~1 firing/cycle + fill skew
+    assert bal.cycles <= 200 + 20
+    assert bal.cycles <= base.cycles  # balancing never hurts
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_balanced_plans_preserve_throughput(seed):
+    """Random layered DAG; pipeline random edges; balanced depths from the
+    SDC solver must keep cycles within fill+drain of the unpipelined run."""
+    from repro.core.balance import balance_latencies
+    rng = np.random.default_rng(seed)
+    layers = [["src"]]
+    b = TaskGraphBuilder("rand")
+    b.invoke("src", area={})
+    nid = 0
+    edges = []
+    for li in range(1, int(rng.integers(2, 5))):
+        width = int(rng.integers(1, 4))
+        layer = []
+        for j in range(width):
+            name = f"t{nid}"
+            nid += 1
+            srcs = rng.choice(layers[-1],
+                              size=int(rng.integers(1, len(layers[-1]) + 1)),
+                              replace=False)
+            snames = []
+            for s in srcs:
+                sn = f"e{len(edges)}"
+                b.stream(sn, width=8)
+                edges.append(sn)
+                snames.append((s, sn))
+            layer.append((name, snames))
+        for name, snames in layer:
+            b.invoke(name, area={}, ins=[sn for _, sn in snames])
+            for s, sn in snames:
+                b._stream_defs[sn].src = s  # wire producer
+        layers.append([n for n, _ in layer])
+    g = b.build()
+    lat = {e: int(rng.integers(0, 4)) for e in edges}
+    bal = balance_latencies([(s.name, s.src, s.dst, lat[s.name], s.width)
+                             for s in g.streams])
+    depth = {e: lat[e] + bal.balance[e] for e in edges}
+    n = 150
+    base = simulate(g, firings=n)
+    piped = simulate(g, firings=n, latency=depth)
+    assert not piped.deadlocked
+    fill = sum(depth.values()) + g.num_tasks
+    assert piped.cycles <= base.cycles + fill
+    # steady state: at most +1 cycle per 50 firings beyond fill
+    assert piped.cycles - base.cycles <= fill

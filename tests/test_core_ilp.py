@@ -1,0 +1,89 @@
+"""Exactness and feasibility tests for the bipartition ILP engine."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ilp import (BipartitionProblem, Edge, brute_force_bipartition,
+                            check_feasible, solve_bipartition, total_cost,
+                            InfeasibleError)
+
+
+def _random_problem(rng, n, n_edges, n_groups=1, cap_slack=1.5, with_k=False):
+    areas = [{"LUT": float(rng.integers(1, 20))} for _ in range(n)]
+    group = [int(rng.integers(0, n_groups)) for _ in range(n)]
+    per_group = [sum(areas[i]["LUT"] for i in range(n) if group[i] == g)
+                 for g in range(n_groups)]
+    cap0 = [{"LUT": max(1.0, per_group[g] / 2 * cap_slack)} for g in range(n_groups)]
+    cap1 = [{"LUT": max(1.0, per_group[g] / 2 * cap_slack)} for g in range(n_groups)]
+    edges = []
+    for _ in range(n_edges):
+        u, v = rng.integers(0, n, size=2)
+        if u == v:
+            continue
+        k = float(rng.integers(-2, 3)) if with_k else 0.0
+        edges.append(Edge(u=int(u), v=int(v), w=float(rng.integers(1, 64)), k=k))
+    return BipartitionProblem(areas=areas, group=group, cap0=cap0,
+                              cap1=cap1, edges=edges)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_bnb_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, n=int(rng.integers(3, 11)),
+                        n_edges=int(rng.integers(2, 16)),
+                        n_groups=int(rng.integers(1, 3)),
+                        with_k=(seed % 2 == 0))
+    ref_assign, ref_cost = brute_force_bipartition(p)
+    if ref_assign is None:
+        with pytest.raises(InfeasibleError):
+            solve_bipartition(p)
+        return
+    assign, cost, stats = solve_bipartition(p)
+    assert stats["exact"]
+    assert check_feasible(p, assign)
+    assert cost == pytest.approx(ref_cost)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_bnb_respects_pins(seed):
+    rng = np.random.default_rng(100 + seed)
+    p = _random_problem(rng, n=8, n_edges=10)
+    p.pinned = {0: 1, 3: 0}
+    ref_assign, ref_cost = brute_force_bipartition(p)
+    if ref_assign is None:
+        return
+    assign, cost, _ = solve_bipartition(p)
+    assert assign[0] == 1 and assign[3] == 0
+    assert cost == pytest.approx(ref_cost)
+
+
+def test_heuristic_on_large_instance_feasible():
+    rng = np.random.default_rng(7)
+    p = _random_problem(rng, n=300, n_edges=600, n_groups=4)
+    assign, cost, stats = solve_bipartition(p, exact_threshold=0)
+    assert check_feasible(p, assign)
+    assert cost >= 0
+
+
+def test_tight_capacity_forces_balance():
+    # 4 equal tasks in a chain, capacity for exactly 2 per side:
+    # optimal respects capacity even though cutting once is cheapest.
+    p = BipartitionProblem(
+        areas=[{"LUT": 10.0}] * 4, group=[0] * 4,
+        cap0=[{"LUT": 20.0}], cap1=[{"LUT": 20.0}],
+        edges=[Edge(0, 1, 5.0), Edge(1, 2, 5.0), Edge(2, 3, 5.0)])
+    assign, cost, _ = solve_bipartition(p)
+    assert sum(assign) == 2
+    assert cost == pytest.approx(5.0)  # split a single chain edge
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 9), st.integers(0, 14), st.integers(0, 10_000))
+def test_property_exactness(n, n_edges, seed):
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, n=n, n_edges=n_edges, cap_slack=2.0)
+    ref_assign, ref_cost = brute_force_bipartition(p)
+    assert ref_assign is not None  # slack 2.0 always feasible
+    assign, cost, stats = solve_bipartition(p)
+    assert check_feasible(p, assign)
+    assert cost == pytest.approx(ref_cost)

@@ -1,0 +1,64 @@
+"""FPGA reproduction invariants: benchmark areas match the paper's
+utilization tables; the co-optimization beats the packed baseline; cycles
+are preserved."""
+import pytest
+
+from repro.core import (analyze_timing, autobridge, packed_placement,
+                        simulate)
+from repro.fpga import benchmarks as B, u250_grid, u280_grid
+
+U250 = {"LUT": 1728e3, "BRAM": 5376, "DSP": 12288}
+U280 = {"LUT": 1303e3, "BRAM": 4032, "DSP": 9024, "URAM": 960}
+
+
+@pytest.mark.parametrize("graph,dev,key,paper_pct", [
+    (B.cnn(2), U250, "LUT", 17.8), (B.cnn(16), U250, "DSP", 67.8),
+    (B.gaussian(24), U250, "LUT", 54.05), (B.bucket_sort(), U280, "LUT", 28.44),
+    (B.page_rank(), U280, "LUT", 38.56), (B.spmm(False), U280, "BRAM", 71.55),
+    (B.spmv(28, False), U280, "LUT", 27.95),
+])
+def test_areas_match_paper(graph, dev, key, paper_pct):
+    tot = graph.total_area()
+    pct = 100 * tot.get(key, 0) / dev[key]
+    assert pct == pytest.approx(paper_pct, rel=0.06), (graph.name, key, pct)
+
+
+def test_async_mmap_area_delta():
+    """Table 3/8: async_mmap saves exactly 15 BRAM per channel."""
+    mm = B.spmm(False).total_area()
+    an = B.spmm(True).total_area()
+    assert mm["BRAM"] - an["BRAM"] == 29 * 15
+
+
+@pytest.mark.parametrize("make,grid", [
+    (lambda: B.stencil(4), u250_grid()),
+    (lambda: B.cnn(4), u250_grid()),
+    (lambda: B.gaussian(16), u280_grid()),
+    (lambda: B.page_rank(), u280_grid()),
+])
+def test_tapa_beats_baseline(make, grid):
+    g = make()
+    base = analyze_timing(g, grid, packed_placement(g, grid))
+    plan = autobridge(g, grid, max_util=0.75)
+    opt = analyze_timing(g, grid, plan.floorplan.placement, plan.depth)
+    assert opt.routed
+    base_f = base.fmax_mhz if base.routed else 0.0
+    assert opt.fmax_mhz > base_f
+
+
+def test_cycles_preserved_bucket_sort():
+    g = B.bucket_sort()
+    plan = autobridge(g, u280_grid(), max_util=0.75)
+    base = simulate(g, firings=200)
+    opt = simulate(g, firings=200, latency=plan.depth)
+    assert not opt.deadlocked
+    # fill/drain only (paper Table 6: 78629 -> 78632)
+    assert opt.cycles - base.cycles <= sum(plan.depth.values()) + g.num_tasks
+
+
+def test_pagerank_cycles_feasible_with_control_streams():
+    g = B.page_rank()
+    plan = autobridge(g, u280_grid(), max_util=0.75)
+    assert plan.feedback_rounds == 0         # control streams break cycles
+    assert all(plan.balancing.balance[s.name] == 0
+               for s in g.streams if s.control)
