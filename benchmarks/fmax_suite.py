@@ -36,7 +36,7 @@ def run_tapa(graph, grid, seed: int = 0):
     raise last
 
 
-def evaluate(name: str, board: str, graph):
+def evaluate(name: str, board: str, graph, sim_firings: int | None = None):
     grid = grid_for(board)
     base_pl = packed_placement(graph, grid)
     base = analyze_timing(graph, grid, base_pl)
@@ -50,7 +50,7 @@ def evaluate(name: str, board: str, graph):
         plan, util, wall, overhead = None, None, time.monotonic() - t0, 0.0
         opt = analyze_timing(graph, grid, base_pl)  # placeholder, marked fail
         opt.routed, opt.fmax_mhz, opt.fail_reason = False, 0.0, str(e)
-    return {
+    row = {
         "name": name, "board": board,
         "tasks": graph.num_tasks, "streams": graph.num_streams,
         "base_mhz": base.fmax_mhz if base.routed else 0.0,
@@ -60,18 +60,29 @@ def evaluate(name: str, board: str, graph):
         "util": util, "wall_s": wall,
         "buffer_overhead_bits": overhead,
     }
+    if sim_firings and plan is not None:
+        # throughput preservation by dataflow simulation (paper Tables 4-7):
+        # base and optimized variants run as one batched, vectorized call.
+        sim_base, sim_opt = plan.verify_throughput(firings=sim_firings)
+        row["cycles_base"] = sim_base.cycles
+        row["cycles_opt"] = sim_opt.cycles
+        row["cycles_delta"] = sim_opt.cycles - sim_base.cycles
+        row["sim_deadlock"] = sim_opt.deadlocked
+    return row
 
 
-def main(verbose: bool = True) -> list[dict]:
+def main(verbose: bool = True, sim_firings: int | None = None) -> list[dict]:
     rows = []
     for name, board, graph in B.autobridge_suite():
-        r = evaluate(name, board, graph)
+        r = evaluate(name, board, graph, sim_firings=sim_firings)
         rows.append(r)
         if verbose:
             base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
             opt = f"{r['opt_mhz']:.0f}" if not r["opt_fail"] else "FAIL"
+            cyc = (f" cycles_delta={r['cycles_delta']}"
+                   if "cycles_delta" in r else "")
             print(f"fmax_suite,{r['name']}@{r['board']},{r['wall_s']*1e6:.0f},"
-                  f"base={base}MHz opt={opt}MHz util={r['util']}")
+                  f"base={base}MHz opt={opt}MHz util={r['util']}{cyc}")
     n = len(rows)
     base_avg = sum(r["base_mhz"] for r in rows) / n
     opt_avg = sum(r["opt_mhz"] for r in rows) / n

@@ -8,7 +8,7 @@ packed flow.
   PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import (TaskGraphBuilder, analyze_timing, autobridge,
-                        packed_placement, simulate)
+                        packed_placement)
 from repro.fpga import u280_grid
 
 # --- VecAdd from the paper's Listing 1: 4 PEs, Load/Add/Store each -------
@@ -36,8 +36,8 @@ print(f"baseline flow: {base.fmax_mhz:.0f} MHz "
       f"({'routed' if base.routed else 'UNROUTABLE: ' + base.fail_reason})")
 print(f"TAPA flow:     {opt.fmax_mhz:.0f} MHz")
 
-# throughput preservation (paper §5): cycle counts with and without depth
-base_sim = simulate(graph, firings=500)
-opt_sim = simulate(graph, firings=500, latency=plan.depth)
+# throughput preservation (paper §5): cycle counts with and without depth,
+# both variants in one batched (vectorized) simulator call
+base_sim, opt_sim = plan.verify_throughput(firings=500)
 print(f"cycles: {base_sim.cycles} -> {opt_sim.cycles} "
       f"(+{opt_sim.cycles - base_sim.cycles} fill/drain only)")

@@ -10,11 +10,15 @@ from .explorer import Candidate, best_candidate, explore_floorplans
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing, packed_placement
 from .ilp import InfeasibleError
 from .pipelining import PipelineAssignment, assign_pipelining
-from .simulate import SimResult, simulate
+from .simulate import (SimJob, SimResult, pipeline_headroom, simulate,
+                       simulate_batch)
 
 __all__ = [
     "Plan", "autobridge", "BalanceResult", "CycleError", "balance_graph",
     "balance_latencies", "Boundary", "SlotGrid", "Floorplan", "floorplan",
     "Stream", "Task", "TaskGraph", "TaskGraphBuilder", "InfeasibleError",
     "PipelineAssignment", "assign_pipelining",
+    "Candidate", "best_candidate", "explore_floorplans",
+    "PhysicalModel", "TimingReport", "analyze_timing", "packed_placement",
+    "SimJob", "SimResult", "pipeline_headroom", "simulate", "simulate_batch",
 ]

@@ -23,6 +23,7 @@ from .floorplan import Floorplan, floorplan
 from .graph import TaskGraph
 from .ilp import InfeasibleError
 from .pipelining import PipelineAssignment, assign_pipelining
+from .simulate import SimJob, SimResult, simulate_batch
 
 
 @dataclasses.dataclass
@@ -50,6 +51,30 @@ class Plan:
             "area_overhead": self.area_overhead,
             "feedback_rounds": self.feedback_rounds,
         }
+
+    @property
+    def sim_extra_capacity(self) -> dict[str, int]:
+        """Almost-full FIFO headroom for simulating this plan: the
+        round-trip term (2 per inserted register level, paper Fig. 10).
+        The plan owns this term — ``simulate()`` adds no implicit
+        headroom."""
+        return {name: 2 * d for name, d in self.depth.items()}
+
+    def sim_job(self) -> SimJob:
+        """The pipelined+balanced design as a ``simulate_batch`` job."""
+        return SimJob(self.graph, latency=dict(self.depth),
+                      extra_capacity=self.sim_extra_capacity)
+
+    def verify_throughput(self, *, firings: int = 200,
+                          max_cycles: int | None = None,
+                          ) -> tuple[SimResult, SimResult]:
+        """Simulate the design before and after co-optimization (paper §5's
+        throughput theorem): returns ``(base, optimized)``.  A correct plan
+        never deadlocks and adds only fill/drain skew to the cycle count."""
+        base, opt = simulate_batch(
+            [SimJob(self.graph), self.sim_job()],
+            firings=firings, max_cycles=max_cycles)
+        return base, opt
 
 
 def autobridge(graph: TaskGraph, grid: SlotGrid, *,

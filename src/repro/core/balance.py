@@ -30,10 +30,26 @@ vertices and re-floorplanning, exactly as in the paper.
 from __future__ import annotations
 
 import dataclasses
+import math
+from fractions import Fraction
 
 import networkx as nx
 
 from .graph import TaskGraph
+
+
+def _integer_scale(widths: list[float], *, max_denominator: int = 10 ** 6,
+                   max_scale: int = 10 ** 9) -> int:
+    """Smallest multiplier turning every width into an (approximate)
+    integer.  Exact for the common rational widths (0.5, 1.5, ...); falls
+    back to a bounded scale for pathological floats."""
+    scale = 1
+    for w in widths:
+        frac = Fraction(w).limit_denominator(max_denominator)
+        scale = scale * frac.denominator // math.gcd(scale, frac.denominator)
+        if scale > max_scale:
+            return max_scale
+    return scale
 
 
 class CycleError(RuntimeError):
@@ -67,22 +83,57 @@ def balance_latencies(edges: list[tuple[str, str, str, int, float]],
         nodes.add(s)
         nodes.add(d)
 
+    # SDC infeasibility <=> a dependency cycle with positive total inserted
+    # latency.  Detect it up front (Bellman-Ford negative-cycle search) so
+    # the feedback loop always gets a concrete cycle to co-locate, instead
+    # of relying on network_simplex's unboundedness heuristic.
+    cyc = _positive_lat_cycle(edges)
+    if cyc is not None:
+        raise CycleError(cyc)
+
+    if all(lat == 0 for _, _, _, lat, _ in edges):
+        # nothing pipelined: the zero solution is trivially optimal
+        return BalanceResult(balance={name: 0 for name, *_ in edges},
+                             potentials={n: 0 for n in nodes},
+                             overhead=0.0, objective=0.0)
+
     # supplies: c_i = sum w(out) - sum w(in); flow constraint out-in = c_i,
-    # networkx demand is in-out = -c_i
-    c: dict[str, float] = {n: 0.0 for n in nodes}
+    # networkx demand is in-out = -c_i.  network_simplex needs *integer*
+    # demands that sum to zero exactly, so scale all widths by the LCM of
+    # their denominators first — rounding each node independently (as an
+    # earlier revision did) can leave fractional widths like 0.5 with a
+    # nonzero demand total (NetworkXUnfeasible) or silently move the
+    # optimum.  The scale factor multiplies every supply uniformly, so the
+    # dual potentials (and hence the balance solution) are unchanged.
+    scale = _integer_scale([w for _, _, _, _, w in edges])
+    c: dict[str, int] = {n: 0 for n in nodes}
     for _, s, d, _, w in edges:
-        c[s] += w
-        c[d] -= w
+        wi = int(round(w * scale))
+        c[s] += wi
+        c[d] -= wi
+
+    # network_simplex flags "unbounded" whenever some arc carries flow
+    # >= faux_inf/2 with faux_inf = 3*max(sum|weights|, max|demand|).  Our
+    # width-derived demands can dwarf the latency weights, so a legitimate
+    # flow on a wide design used to trip a *false* negative-cycle report
+    # (CycleError "<unknown>" on cnn/gaussian).  Scale the arc costs by K
+    # so sum|weights| >= total supply: with infinite capacities a basic
+    # solution routes at most the total supply through any arc, which is
+    # then < faux_inf/2.  The duals scale by exactly K (every residual
+    # weight is a multiple of K), undone when recovering S.
+    supply = sum(v for v in c.values() if v > 0)
+    lat_sum = sum(lat for _, _, _, lat, _ in edges)
+    K = max(1, -(-supply // lat_sum))          # ceil(supply / lat_sum)
 
     # Build flow graph with one midpoint node per edge so parallel streams
     # between the same task pair keep independent duals.
     G = nx.DiGraph()
     for n in nodes:
-        G.add_node(n, demand=int(round(-c[n])))
+        G.add_node(n, demand=-c[n])
     for name, s, d, lat, w in edges:
         m = ("__mid__", name)
         G.add_node(m, demand=0)
-        G.add_edge(s, m, weight=-int(lat))
+        G.add_edge(s, m, weight=-int(lat) * K)
         G.add_edge(m, d, weight=0)
 
     try:
@@ -105,9 +156,12 @@ def balance_latencies(edges: list[tuple[str, str, str, int, float]],
     R.add_node(src)
     for n in G.nodes:
         R.add_edge(src, n, weight=0)
-    dist = nx.single_source_bellman_ford_path_length(R, src)
+    try:
+        dist = nx.single_source_bellman_ford_path_length(R, src)
+    except nx.NetworkXUnbounded:      # defensive: residual negative cycle
+        raise _find_cycle(edges)
 
-    S = {n: int(round(dist[n])) for n in nodes}
+    S = {n: int(round(dist[n] / K)) for n in nodes}
     # normalize each weakly-connected component to min 0
     U = nx.Graph()
     U.add_nodes_from(nodes)
@@ -134,8 +188,10 @@ def balance_latencies(edges: list[tuple[str, str, str, int, float]],
                          objective=objective)
 
 
-def _find_cycle(edges) -> CycleError:
-    """Locate a positive-latency cycle for the floorplan feedback loop."""
+def _positive_lat_cycle(edges) -> list[str] | None:
+    """Find a dependency cycle with positive total inserted latency (the
+    SDC-infeasibility witness), or None.  One Bellman-Ford negative-cycle
+    search from a super-source reaching every vertex."""
     H = nx.DiGraph()
     for name, s, d, lat, w in edges:
         # keep the max-latency arc per pair for detection purposes
@@ -143,14 +199,28 @@ def _find_cycle(edges) -> CycleError:
             H[s][d]["weight"] = min(H[s][d]["weight"], -lat)
         else:
             H.add_edge(s, d, weight=-lat)
+    src = ("__cycsrc__",)
+    H.add_node(src)
     for n in list(H.nodes):
-        try:
-            cyc = nx.find_negative_cycle(H, n)
-            return CycleError(cyc)
-        except nx.NetworkXError:
-            continue
+        if n != src:
+            H.add_edge(src, n, weight=0)
+    try:
+        cyc = nx.find_negative_cycle(H, src)
+    except nx.NetworkXError:
+        return None
+    return [n for n in cyc if n != src]
+
+
+def _find_cycle(edges) -> CycleError:
+    """Locate a positive-latency cycle for the floorplan feedback loop."""
+    cyc = _positive_lat_cycle(edges)
+    if cyc is not None:
+        return CycleError(cyc)
     # fallback: any directed cycle (all-zero-latency cycles are feasible, so
     # reaching here means numeric trouble; report any cycle)
+    H = nx.DiGraph()
+    for name, s, d, lat, w in edges:
+        H.add_edge(s, d)
     try:
         cyc = [u for u, _ in nx.find_cycle(H)]
         return CycleError(cyc + [cyc[0]])

@@ -18,6 +18,7 @@ from .devicegrid import SlotGrid
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing
 from .graph import TaskGraph
 from .ilp import InfeasibleError
+from .simulate import SimJob, SimResult, simulate_batch
 
 
 @dataclasses.dataclass
@@ -26,10 +27,26 @@ class Candidate:
     plan: Plan | None
     report: TimingReport | None
     error: str | None = None
+    #: dataflow-simulated cycles of the pipelined+balanced design (filled by
+    #: the batched throughput evaluation; None when not requested/feasible)
+    sim: SimResult | None = None
+    #: cycles of the unpipelined baseline design (shared across candidates)
+    base_sim: SimResult | None = None
 
     @property
     def fmax(self) -> float:
         return self.report.fmax_mhz if self.report else 0.0
+
+    @property
+    def throughput_preserved(self) -> bool | None:
+        """True iff the simulated candidate kept the baseline's steady-state
+        throughput (only fill/drain skew added).  None when not simulated."""
+        if self.sim is None or self.base_sim is None or self.plan is None:
+            return None
+        if self.sim.deadlocked:
+            return False
+        skew = sum(self.plan.depth.values()) + self.plan.graph.num_tasks
+        return self.sim.cycles <= self.base_sim.cycles + skew
 
 
 def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
@@ -38,10 +55,17 @@ def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
                        seed: int = 0,
                        model: PhysicalModel = PhysicalModel(),
                        score: Callable[[Plan], TimingReport] | None = None,
+                       sim_firings: int | None = None,
                        **ab_kwargs) -> list[Candidate]:
     """Generate one candidate per max-util point ("implement all of them in
     parallel", paper Table 10).  Infeasible points are kept as failed
-    candidates — the paper's Table 10 reports those as 'Failed'."""
+    candidates — the paper's Table 10 reports those as 'Failed'.
+
+    With ``sim_firings`` set, every feasible candidate's throughput is
+    checked by dataflow simulation in *one* ``simulate_batch`` call (the
+    candidates share the design's topology, so the sweep vectorizes across
+    max-util points instead of re-running the per-cycle loop per plan).
+    """
     out: list[Candidate] = []
     for u in utils:
         try:
@@ -56,11 +80,22 @@ def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
             rep = analyze_timing(graph, grid, plan.floorplan.placement,
                                  plan.depth, model)
         out.append(Candidate(max_util=u, plan=plan, report=rep))
+    if sim_firings:
+        feasible = [c for c in out if c.plan is not None]
+        if feasible:
+            jobs = [SimJob(graph)] + [c.plan.sim_job() for c in feasible]
+            results = simulate_batch(jobs, firings=sim_firings)
+            base = results[0]
+            for c, res in zip(feasible, results[1:]):
+                c.sim = res
+                c.base_sim = base
     return out
 
 
 def best_candidate(cands: list[Candidate]) -> Candidate:
-    ok = [c for c in cands if c.plan is not None and c.report and c.report.routed]
+    ok = [c for c in cands
+          if c.plan is not None and c.report and c.report.routed
+          and (c.sim is None or not c.sim.deadlocked)]
     if not ok:
         raise InfeasibleError("no routable floorplan candidate")
     return max(ok, key=lambda c: c.report.fmax_mhz)

@@ -43,8 +43,17 @@ class Floorplan:
         for slot, load in self.slot_loads.items():
             cap = dict(self.grid.base_capacity)
             cap.update(self.grid.slot_caps.get(slot, {}))
-            out[slot] = {k: (v / cap[k] if cap.get(k) else 0.0)
-                         for k, v in load.items() if k in cap}
+            util: dict[str, float] = {}
+            for k, v in load.items():
+                if k not in cap:
+                    continue
+                if cap[k]:
+                    util[k] = v / cap[k]
+                else:
+                    # nonzero load on a zero-capacity resource is overflow,
+                    # not 0% utilization — surface it instead of hiding it.
+                    util[k] = float("inf") if v > 0 else 0.0
+            out[slot] = util
         return out
 
     def crossings(self, graph: TaskGraph) -> dict[str, int]:

@@ -1,24 +1,66 @@
-"""Cycle-accurate dataflow FIFO simulator.
+"""Dataflow FIFO simulators: event-driven (default), per-cycle (reference),
+and a NumPy-vectorized batch engine for floorplan sweeps.
 
 Validates the paper's central throughput theorem (§5): pipelining every
 cross-slot stream and *balancing* reconvergent paths leaves steady-state
 throughput unchanged — total execution cycles grow only by the pipeline
 fill/drain skew (paper Tables 4-7 report cycle deltas of ~10 out of 1e5).
 
-Model: each task fires when every input FIFO has a token and every output
-FIFO has space; a firing consumes/produces one token per stream.  A stream
-has ``capacity`` slots and ``latency`` cycles (a written token becomes
-visible to the consumer ``latency`` cycles later — the pipeline registers).
-Tasks may have an initiation interval > 1.  This is the FSM/ap_ctrl
-hand-shake abstraction of the paper's RTL at the granularity that matters
-for inter-task throughput.
+Model: each task fires when every input FIFO has a visible token and every
+output FIFO has space; a firing consumes/produces one token per stream.  A
+stream has ``capacity`` slots and ``latency`` cycles (a written token
+becomes visible to the consumer ``latency`` cycles later — the pipeline
+registers; it occupies a FIFO slot from the moment it is written).  Tasks
+may have an initiation interval > 1.  This is the FSM/ap_ctrl hand-shake
+abstraction of the paper's RTL at the granularity that matters for
+inter-task throughput.
+
+Capacity ownership
+------------------
+``capacity(s) = s.depth + extra_capacity[s]`` — nothing more.  The
+almost-full round-trip headroom a pipelined stream needs to sustain full
+throughput (paper Fig. 10) is owned by the *pipeliner*:
+``assign_pipelining`` returns it as ``extra_depth = 2 * lat`` and
+``Plan.sim_extra_capacity`` exposes it for simulation.  Earlier revisions
+silently added another ``2 * latency`` inside ``simulate`` on top of the
+pipeliner's term, handing callers 4x headroom that masked real almost-full
+stalls; use ``pipeline_headroom`` if you need the term for an ad-hoc
+latency map.
+
+Engines
+-------
+* ``engine="event"`` (default): a ready-heap of (earliest-fire-cycle, task)
+  events derived from FIFO token-visibility times, initiation intervals and
+  almost-full back-pressure.  Wall-time scales with the number of firings,
+  not the number of cycles — a task with II=8 costs one event per firing
+  instead of 7 idle scans, and fill/drain phases cost nothing.
+* ``engine="cycle"``: the original synchronous per-cycle scan, kept as the
+  reference semantics; the event engine is cross-checked against it on
+  randomized graphs in the test suite.
+* ``simulate_batch``: many (graph, latency, capacity, II) variants at once.
+  When all jobs share one topology the per-cycle update is vectorized with
+  NumPy across variants (the explorer's max-util sweep evaluates dozens of
+  floorplan candidates per call); otherwise it falls back to per-job event
+  simulation.
+
+All engines implement the exact same synchronous-firing semantics: a task
+fires at cycle t iff its constraints hold on the state produced by cycles
+< t, so same-cycle firings are order-independent and the three engines
+agree bit-for-bit on ``cycles``/``fired``/``deadlocked``.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
+from typing import Mapping, Sequence
 
 from .graph import TaskGraph
+
+try:  # NumPy is a hard dependency of the repo, but keep the engine gated.
+    import numpy as _np
+except ModuleNotFoundError:  # pragma: no cover
+    _np = None
 
 
 @dataclasses.dataclass
@@ -26,65 +68,205 @@ class SimResult:
     cycles: int
     fired: dict[str, int]
     deadlocked: bool
+    #: scheduler steps the engine executed (events processed for the event
+    #: engine; cycles scanned for the per-cycle engines).
+    steps: int = 0
+    engine: str = "event"
 
 
-def simulate(graph: TaskGraph, *, firings: int,
-             latency: dict[str, int] | None = None,
-             extra_capacity: dict[str, int] | None = None,
-             ii: dict[str, int] | None = None,
-             max_cycles: int | None = None) -> SimResult:
-    """Run until every non-detached task fired ``firings`` times.
+@dataclasses.dataclass
+class SimJob:
+    """One simulation variant for ``simulate_batch``."""
+    graph: TaskGraph
+    latency: dict[str, int] | None = None
+    extra_capacity: dict[str, int] | None = None
+    ii: dict[str, int] | None = None
 
-    latency[s]        — pipeline registers on stream s (default 0)
-    extra_capacity[s] — added FIFO depth beyond the declared one
-    ii[t]             — initiation interval of task t (default 1)
-    """
-    latency = latency or {}
-    extra_capacity = extra_capacity or {}
-    ii = ii or {}
-    max_cycles = max_cycles or firings * 64 + 10_000
 
-    names = list(graph.tasks)
-    # Control streams carry per-phase handshakes, not per-datum tokens:
-    # exclude them from the steady-state token simulation.
-    data = [s for s in graph.streams if not s.control]
-    # FIFO state: queue of (visible_at_cycle) timestamps; occupancy counts
-    # in-flight tokens against capacity (they occupy a slot from write).
-    queues: dict[str, deque] = {s.name: deque() for s in data}
-    cap = {s.name: s.depth + extra_capacity.get(s.name, 0)
-           + 2 * latency.get(s.name, 0) for s in data}
-    lat = {s.name: latency.get(s.name, 0) for s in data}
+def pipeline_headroom(latency: Mapping[str, int]) -> dict[str, int]:
+    """Almost-full round-trip FIFO headroom for a latency map (2 per register
+    level, paper Fig. 10).  ``assign_pipelining`` computes this for plans;
+    use this helper when simulating an ad-hoc latency assignment."""
+    return {name: 2 * int(lat) for name, lat in latency.items()}
 
-    ins = {n: [s.name for s in graph.in_streams(n) if not s.control]
-           for n in names}
-    outs = {n: [s.name for s in graph.out_streams(n) if not s.control]
-            for n in names}
-    next_free = {n: 0 for n in names}     # cycle at which task may fire again
+
+# ---------------------------------------------------------------------------
+# shared model resolution
+# ---------------------------------------------------------------------------
+
+class _Model:
+    """Graph + per-variant knobs resolved to plain indexed arrays."""
+
+    def __init__(self, graph: TaskGraph, latency, extra_capacity, ii):
+        latency = latency or {}
+        extra_capacity = extra_capacity or {}
+        ii = ii or {}
+        self.graph = graph
+        self.names = list(graph.tasks)
+        # Control streams carry per-phase handshakes, not per-datum tokens:
+        # exclude them from the steady-state token simulation.
+        self.data = [s for s in graph.streams if not s.control]
+        self.lat = {s.name: int(latency.get(s.name, 0)) for s in self.data}
+        self.cap = {s.name: int(s.depth) + int(extra_capacity.get(s.name, 0))
+                    for s in self.data}
+        self.ii = {n: int(ii.get(n, 1)) for n in self.names}
+        self.ins = {n: [s.name for s in graph.in_streams(n) if not s.control]
+                    for n in self.names}
+        self.outs = {n: [s.name for s in graph.out_streams(n) if not s.control]
+                     for n in self.names}
+        self.producer = {s.name: s.src for s in self.data}
+        self.consumer = {s.name: s.dst for s in self.data}
+        self.detached = {n: graph.tasks[n].detached for n in self.names}
+
+
+# ---------------------------------------------------------------------------
+# event-driven engine
+# ---------------------------------------------------------------------------
+
+def _simulate_event(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
+    names = m.names
+    want = firings
+    fired = {n: 0 for n in names}
+    next_free = {n: 0 for n in names}
+    # Append-only firing logs per stream: push/pop timestamps by token index.
+    push_times: dict[str, list[int]] = {s.name: [] for s in m.data}
+    pop_times: dict[str, list[int]] = {s.name: [] for s in m.data}
+
+    remaining = sum(1 for n in names if not m.detached[n] and want > 0)
+    if remaining == 0:
+        return SimResult(cycles=0, fired=fired, deadlocked=False, steps=0,
+                         engine="event")
+
+    def bound(n: str) -> int | None:
+        """Earliest cycle at which task n's next firing can happen, or None
+        if it is blocked on a token/pop that does not exist yet.  Once all
+        constraints exist the bound is final for this firing index."""
+        f = fired[n]
+        if f >= want:
+            return None
+        t = next_free[n]
+        for s in m.ins[n]:
+            pt = push_times[s]
+            if f >= len(pt):
+                return None                       # token not produced yet
+            t = max(t, pt[f] + 1 + m.lat[s])      # visibility time
+        for s in m.outs[n]:
+            k = f - m.cap[s]                      # pop freeing the slot
+            if k >= 0:
+                qt = pop_times[s]
+                if k >= len(qt):
+                    return None                   # consumer hasn't freed it
+                t = max(t, qt[k] + 1)             # space visible next cycle
+        return t
+
+    heap: list[tuple[int, str]] = []
+    pending: dict[str, int] = {}
+
+    def schedule(n: str) -> None:
+        b = bound(n)
+        if b is None:
+            return
+        cur = pending.get(n)
+        if cur is not None and cur <= b:
+            return
+        pending[n] = b
+        heapq.heappush(heap, (b, n))
+
+    for n in names:
+        schedule(n)
+
+    steps = 0
+    end_time: int | None = None                   # last-completed fire cycle
+    truncated = False
+    while heap:
+        t, n = heapq.heappop(heap)
+        if end_time is not None and t > end_time:
+            break
+        if t >= max_cycles:
+            truncated = True
+            break
+        if pending.get(n) != t:
+            continue                              # stale duplicate
+        del pending[n]
+        b = bound(n)
+        if b is None:
+            continue
+        if b > t:                                 # defensive; bounds final
+            schedule(n)
+            continue
+        # fire at cycle t
+        steps += 1
+        for s in m.ins[n]:
+            pop_times[s].append(t)
+        for s in m.outs[n]:
+            push_times[s].append(t)
+        fired[n] += 1
+        next_free[n] = t + max(m.ii[n], 1)
+        if not m.detached[n] and fired[n] == want:
+            remaining -= 1
+            if remaining == 0:
+                end_time = t                      # drain same-cycle events
+        schedule(n)
+        for s in m.outs[n]:
+            schedule(m.consumer[s])
+        for s in m.ins[n]:
+            schedule(m.producer[s])
+
+    if remaining == 0:
+        return SimResult(cycles=end_time + 1, fired=fired, deadlocked=False,
+                         steps=steps, engine="event")
+    if truncated:
+        return SimResult(cycles=max_cycles, fired=fired, deadlocked=True,
+                         steps=steps, engine="event")
+    # Deadlock: replicate the per-cycle engine's detection cycle — the first
+    # quiet cycle with every FIFO head visible and every II window elapsed.
+    # next_free >= last fire + 1 for every task that ever fired (II clamped
+    # to >= 1), so its max already bounds the last firing cycle.
+    t_dead = max(next_free.values())
+    for s in m.data:
+        pops, pushes = len(pop_times[s.name]), len(push_times[s.name])
+        if pops < pushes:                          # head = oldest unpopped
+            t_dead = max(t_dead,
+                         push_times[s.name][pops] + 1 + m.lat[s.name])
+    return SimResult(cycles=min(t_dead + 1, max_cycles), fired=fired,
+                     deadlocked=True, steps=steps, engine="event")
+
+
+# ---------------------------------------------------------------------------
+# per-cycle reference engine (original semantics, kept for cross-checking)
+# ---------------------------------------------------------------------------
+
+def _simulate_cycle(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
+    names = m.names
+    queues: dict[str, deque] = {s.name: deque() for s in m.data}
+    cap, lat = m.cap, m.lat
+    next_free = {n: 0 for n in names}
     fired = {n: 0 for n in names}
     want = {n: firings for n in names}
 
     cycle = 0
     while cycle < max_cycles:
-        if all(fired[n] >= want[n] for n in names if not graph.tasks[n].detached):
-            return SimResult(cycles=cycle, fired=fired, deadlocked=False)
+        if all(fired[n] >= want[n] for n in names if not m.detached[n]):
+            return SimResult(cycles=cycle, fired=fired, deadlocked=False,
+                             steps=cycle, engine="cycle")
         progressed = False
         # evaluate firings against state at cycle start (synchronous update)
         plans = []
         for n in names:
             if fired[n] >= want[n] or next_free[n] > cycle:
                 continue
-            if any(not queues[s] or queues[s][0] > cycle for s in ins[n]):
+            if any(not queues[s] or queues[s][0] > cycle for s in m.ins[n]):
                 continue
-            if any(len(queues[s]) >= cap[s] for s in outs[n]):
+            if any(len(queues[s]) >= cap[s] for s in m.outs[n]):
                 continue
             plans.append(n)
         for n in plans:
-            for s in ins[n]:
+            for s in m.ins[n]:
                 queues[s].popleft()
-            for s in outs[n]:
+            for s in m.outs[n]:
                 queues[s].append(cycle + 1 + lat[s])
             fired[n] += 1
-            next_free[n] = cycle + ii.get(n, 1)
+            next_free[n] = cycle + m.ii[n]
             progressed = True
         cycle += 1
         in_flight = (any(q and q[0] > cycle - 1 for q in queues.values())
@@ -92,8 +274,201 @@ def simulate(graph: TaskGraph, *, firings: int,
         if not progressed and not in_flight:
             # nothing fired, nothing in flight, no II wait => deadlock
             if not all(fired[n] >= want[n] for n in names
-                       if not graph.tasks[n].detached):
-                return SimResult(cycles=cycle, fired=fired, deadlocked=True)
+                       if not m.detached[n]):
+                return SimResult(cycles=cycle, fired=fired, deadlocked=True,
+                                 steps=cycle, engine="cycle")
     return SimResult(cycles=cycle, fired=fired,
                      deadlocked=not all(fired[n] >= want[n] for n in names
-                                        if not graph.tasks[n].detached))
+                                        if not m.detached[n]),
+                     steps=cycle, engine="cycle")
+
+
+# ---------------------------------------------------------------------------
+# public single-run API
+# ---------------------------------------------------------------------------
+
+def simulate(graph: TaskGraph, *, firings: int,
+             latency: dict[str, int] | None = None,
+             extra_capacity: dict[str, int] | None = None,
+             ii: dict[str, int] | None = None,
+             max_cycles: int | None = None,
+             engine: str = "event") -> SimResult:
+    """Run until every non-detached task fired ``firings`` times.
+
+    latency[s]        — pipeline registers on stream s (default 0)
+    extra_capacity[s] — added FIFO depth beyond the declared one; this is
+                        the *only* capacity beyond ``Stream.depth`` (pass
+                        ``assign_pipelining().extra_depth`` /
+                        ``Plan.sim_extra_capacity`` / ``pipeline_headroom``
+                        for the almost-full round-trip term)
+    ii[t]             — initiation interval of task t (default 1)
+    engine            — "event" (default, O(firings)) or "cycle" (reference)
+    """
+    max_cycles = max_cycles or firings * 64 + 10_000
+    m = _Model(graph, latency, extra_capacity, ii)
+    if engine == "event":
+        return _simulate_event(m, firings=firings, max_cycles=max_cycles)
+    if engine in ("cycle", "legacy"):
+        return _simulate_cycle(m, firings=firings, max_cycles=max_cycles)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+# ---------------------------------------------------------------------------
+# batched API
+# ---------------------------------------------------------------------------
+
+def _topology_signature(graph: TaskGraph):
+    return (tuple(graph.tasks),
+            tuple((t.detached,) for t in graph.tasks.values()),
+            tuple((s.name, s.src, s.dst, s.depth, s.control)
+                  for s in graph.streams))
+
+
+def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
+                   max_cycles: int | None = None,
+                   backend: str = "auto") -> list[SimResult]:
+    """Simulate many (graph, latency, capacity, II) variants.
+
+    ``jobs`` is a sequence of ``SimJob`` (bare ``TaskGraph``s are promoted
+    to default jobs).  When every job shares one topology — the common case
+    of sweeping floorplan candidates for a fixed design — the synchronous
+    per-cycle update is vectorized across variants with NumPy, so dozens of
+    candidates cost one array-sweep instead of dozens of Python loops.
+    Mixed topologies (or ``backend="event"``) run the event engine per job.
+    """
+    max_cycles = max_cycles or firings * 64 + 10_000
+    norm: list[SimJob] = [j if isinstance(j, SimJob) else SimJob(j)
+                          for j in jobs]
+    if not norm:
+        return []
+    if backend not in ("auto", "event", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}")
+    shared = (_np is not None and len(norm) > 1 and
+              all(j.graph is norm[0].graph or
+                  _topology_signature(j.graph) ==
+                  _topology_signature(norm[0].graph) for j in norm[1:]))
+    if backend == "numpy" and (_np is None or not (shared or len(norm) == 1)):
+        raise ValueError("numpy backend requires NumPy and a shared topology")
+    if backend == "event" or not (shared or backend == "numpy"):
+        return [simulate(j.graph, firings=firings, latency=j.latency,
+                         extra_capacity=j.extra_capacity, ii=j.ii,
+                         max_cycles=max_cycles, engine="event")
+                for j in norm]
+    return _simulate_batch_numpy(norm, firings=firings, max_cycles=max_cycles)
+
+
+def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
+                          max_cycles: int) -> list[SimResult]:
+    """Vectorized synchronous per-cycle engine across variants.
+
+    State is (V, T)/(V, S) integer arrays; token visibility uses a ring
+    buffer of cumulative push counts (a token pushed at cycle u is visible
+    at u + 1 + lat, so the consumer-visible token count at cycle t is the
+    cumulative push count at cycle t - 1 - lat).  FIFO order plus constant
+    per-stream latency make that cumulative-count view exact.
+    """
+    np = _np
+    models = [_Model(j.graph, j.latency, j.extra_capacity, j.ii)
+              for j in jobs]
+    m0 = models[0]
+    names = m0.names
+    snames = [s.name for s in m0.data]
+    V, T, S = len(jobs), len(names), len(snames)
+    tidx = {n: i for i, n in enumerate(names)}
+
+    prod = np.array([tidx[m0.producer[s]] for s in snames], dtype=np.int64) \
+        if S else np.zeros(0, dtype=np.int64)
+    cons = np.array([tidx[m0.consumer[s]] for s in snames], dtype=np.int64) \
+        if S else np.zeros(0, dtype=np.int64)
+    detached = np.array([m0.detached[n] for n in names], dtype=bool)
+    counted = ~detached
+
+    lat = np.array([[m.lat[s] for s in snames] for m in models],
+                   dtype=np.int64).reshape(V, S)
+    cap = np.array([[m.cap[s] for s in snames] for m in models],
+                   dtype=np.int64).reshape(V, S)
+    ii = np.array([[m.ii[n] for n in names] for m in models],
+                  dtype=np.int64).reshape(V, T)
+
+    # incidence matrices stream -> task
+    a_in = np.zeros((S, T), dtype=np.int64)
+    a_out = np.zeros((S, T), dtype=np.int64)
+    for si in range(S):
+        a_in[si, cons[si]] = 1
+        a_out[si, prod[si]] = 1
+    indeg = a_in.sum(axis=0)
+    outdeg = a_out.sum(axis=0)
+
+    H = int(lat.max(initial=0)) + 2
+    hist = np.zeros((V, S, H), dtype=np.int64)     # cum pushes at cycle slot
+    pops = np.zeros((V, S), dtype=np.int64)
+    pushes = np.zeros((V, S), dtype=np.int64)
+    fired = np.zeros((V, T), dtype=np.int64)
+    next_free = np.zeros((V, T), dtype=np.int64)
+
+    active = np.ones(V, dtype=bool)
+    out_cycles = np.full(V, max_cycles, dtype=np.int64)
+    out_dead = np.zeros(V, dtype=bool)
+    steps = 0
+
+    for t in range(max_cycles):
+        done = (fired[:, counted] >= firings).all(axis=1)
+        newly = active & done
+        if newly.any():
+            out_cycles[newly] = t
+            out_dead[newly] = False
+            active &= ~newly
+        if not active.any():
+            break
+        steps += 1
+
+        if S:
+            look = (t - 1 - lat) % H               # (V, S) ring slot
+            vis_cnt = np.take_along_axis(hist, look[:, :, None],
+                                         axis=2)[:, :, 0]
+            tok_ok = vis_cnt > pops
+            space_ok = (pushes - pops) < cap
+            in_ok = (tok_ok.astype(np.int64) @ a_in) == indeg
+            out_ok = (space_ok.astype(np.int64) @ a_out) == outdeg
+        else:
+            in_ok = np.ones((V, T), dtype=bool)
+            out_ok = np.ones((V, T), dtype=bool)
+
+        can = (active[:, None] & (fired < firings) & (next_free <= t)
+               & in_ok & out_ok)
+        fired += can
+        next_free = np.where(can, t + ii, next_free)
+        if S:
+            pops += can[:, cons]
+            pushes += can[:, prod]
+            hist[:, :, t % H] = pushes
+
+        progressed = can.any(axis=1)
+        # post-update in-flight check at cycle t (matches reference engine)
+        if S:
+            nonempty = pops < pushes
+            head_hidden = nonempty & (vis_cnt <= pops)
+            tok_flight = head_hidden.any(axis=1)
+        else:
+            tok_flight = np.zeros(V, dtype=bool)
+        ii_flight = (next_free > t).any(axis=1)
+        quiet = active & ~progressed & ~tok_flight & ~ii_flight
+        if quiet.any():
+            all_done = (fired[:, counted] >= firings).all(axis=1)
+            out_cycles[quiet] = t + 1
+            out_dead[quiet] = ~all_done[quiet]
+            active &= ~quiet
+            if not active.any():
+                break
+
+    still = active
+    if still.any():
+        out_cycles[still] = max_cycles
+        out_dead[still] = ~(fired[still][:, counted] >= firings).all(axis=1)
+
+    return [SimResult(cycles=int(out_cycles[v]),
+                      fired={n: int(fired[v, i])
+                             for i, n in enumerate(names)},
+                      deadlocked=bool(out_dead[v]),
+                      steps=steps, engine="numpy-batch")
+            for v in range(V)]

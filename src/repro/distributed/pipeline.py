@@ -35,6 +35,23 @@ from repro.model import lm
 from repro.model.layers import PDTYPE
 from .sharding import TpuPlan
 
+def _stage_shard_map(f, mesh, in_specs, out_specs):
+    """shard_map with "stage" manual, across jax versions: new releases
+    expose ``jax.shard_map(axis_names={"stage"})`` (data/tp stay with
+    GSPMD).  0.4.x only has ``jax.experimental.shard_map``, whose partial-
+    manual mode (``auto=``) lowers axis_index to a PartitionId op the SPMD
+    partitioner rejects — so there we make *every* axis manual: the inner
+    function sees identical values (stage-local slices, replicated along
+    the other axes), trading only the GSPMD overlap along data/tp."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False,
+                             axis_names={"stage"})
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 # parameter-name -> which matmul dim shards over tp
 _COL = ("wq", "wk", "wv", "w_up", "w_gate", "w_in", "wr", "wg", "w_A",
         "w_shared_in")
@@ -213,7 +230,11 @@ def build_train_loss(cfg: ArchConfig, plan: TpuPlan, rmesh: Mesh, *,
             dmax = max(depths) if depths else 1
             buf_x = jnp.zeros((dmax, mb, seq, cfg.d_model), PDTYPE)
             buf_x0 = jnp.zeros_like(buf_x)
-            z = jnp.zeros((), jnp.float32)
+            # accumulators are rank-1, not rank-0: jax 0.4.x's shard_map
+            # transpose names dim 0 of every residual, which is ill-formed
+            # for scalar residuals (the division keeps the psum'd count as
+            # a residual); a (1,) shape sidesteps it at zero cost.
+            z = jnp.zeros((1,), jnp.float32)
             carry = (buf_x, buf_x0, z, z, z)
             n_ticks = n_micro + total_skew
             if unroll:
@@ -225,7 +246,7 @@ def build_train_loss(cfg: ArchConfig, plan: TpuPlan, rmesh: Mesh, *,
             loss = jax.lax.psum(loss_acc, "stage") / \
                 jnp.maximum(jax.lax.psum(count, "stage"), 1.0)
             aux = jax.lax.psum(aux_acc, "stage") / (n_micro * S_stages)
-            return loss + 0.01 * aux
+            return (loss + 0.01 * aux)[0]
 
         rest = {k: v for k, v in params.items() if k != "groups"}
         # Stage-stack the stage-shared params instead of passing them
@@ -236,10 +257,10 @@ def build_train_loss(cfg: ArchConfig, plan: TpuPlan, rmesh: Mesh, *,
         # `copy` root that crashes XLA:CPU's all-reduce promotion pass.)
         rest_b = jax.tree.map(
             lambda t: jnp.broadcast_to(t[None], (S_stages,) + t.shape), rest)
-        fn = jax.shard_map(
-            inner, mesh=rmesh,
+        fn = _stage_shard_map(
+            inner, rmesh,
             in_specs=(P("stage"), P("stage"), P(), P()),
-            out_specs=P(), check_vma=False, axis_names={"stage"})
+            out_specs=P())
         return fn(params["groups"], rest_b, tokens, extra)
 
     return loss_fn

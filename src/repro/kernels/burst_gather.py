@@ -30,6 +30,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_IB = 8
 
+# jax renamed pltpu.TPUMemorySpace -> pltpu.MemorySpace across releases;
+# support both so the kernel works on the baked-in toolchain.
+_ANY_MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+_ANY_MEMSPACE = _ANY_MEMSPACE.ANY
+
 
 def _kernel(idx_ref, table_ref, o_ref, *, ib):
     t = pl.program_id(0)
@@ -64,7 +69,7 @@ def burst_gather(table: jax.Array, idx: jax.Array, *, ib: int = DEFAULT_IB,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(Np // ib,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        in_specs=[pl.BlockSpec(memory_space=_ANY_MEMSPACE)],
         out_specs=pl.BlockSpec((ib, Dp), lambda t, idx_ref: (t, 0)),
     )
     out = pl.pallas_call(

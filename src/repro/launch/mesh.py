@@ -5,11 +5,25 @@ touches jax device state."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: newer releases expose
+    ``jax.sharding.AxisType`` and accept ``axis_types``; older ones (e.g.
+    0.4.x) default every axis to Auto and take no such argument.  Both
+    paths produce an all-Auto mesh."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except TypeError:  # pragma: no cover - AxisType without the kwarg
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

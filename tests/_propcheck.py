@@ -1,0 +1,94 @@
+"""Property-test compatibility shim.
+
+Uses real `hypothesis` when it is installed; otherwise provides a small,
+deterministic fixed-examples fallback implementing the subset this test
+suite uses: ``given``, ``settings`` and ``strategies.integers /
+sampled_from / floats``.
+
+The fallback draws a fixed number of examples per test (boundary values
+first, then pseudo-random ones from a seed derived from the test name), so
+runs are reproducible with or without hypothesis and tier-1 never dies at
+collection on a missing optional dependency.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import types
+
+    DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A value source: boundary examples first, then seeded draws."""
+
+        def __init__(self, edge_values, draw):
+            self.edge_values = list(edge_values)
+            self.draw = draw
+
+    def _integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy([min_value, max_value],
+                         lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(elements):
+        elems = list(elements)
+        return _Strategy(elems[:2],
+                         lambda rng: elems[rng.randrange(len(elems))])
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy([min_value, max_value],
+                         lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, sampled_from=_sampled_from, floats=_floats,
+        booleans=_booleans)
+
+    def given(*strats, **kw_strats):
+        if kw_strats:
+            raise NotImplementedError(
+                "_propcheck fallback supports positional strategies only")
+
+        def deco(fn):
+            # NB: no functools.wraps — it sets __wrapped__, which makes
+            # pytest resolve the original (n, m, seed) signature and demand
+            # fixtures for the strategy-provided arguments.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_pc_max_examples", DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(
+                    f"propcheck::{fn.__module__}::{fn.__qualname__}")
+                for i in range(n):
+                    case = tuple(
+                        s.edge_values[i] if i < len(s.edge_values)
+                        else s.draw(rng)
+                        for s in strats)
+                    try:
+                        fn(*args, *case, **kwargs)
+                    except BaseException:
+                        print(f"_propcheck falsifying example: "
+                              f"{fn.__qualname__}{case}")
+                        raise
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._pc_given = True
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+
+        return deco

@@ -1,0 +1,11 @@
+"""Test-suite bootstrap: make the tests directory importable so modules can
+use the `_propcheck` hypothesis-compat shim regardless of pytest import
+mode, and make `src/` importable even without PYTHONPATH=src."""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+for p in (_HERE, _SRC):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -5,7 +5,7 @@ import itertools
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.balance import CycleError, balance_latencies
 
@@ -78,6 +78,35 @@ def test_zero_cycle_feasible():
              ("bc", "b", "c", 2, 1)]
     res = balance_latencies(edges)
     assert res.balance["ab"] == 0 and res.balance["ba"] == 0
+
+
+def test_fractional_widths_feasible():
+    """0.5-wide fanout: per-node supplies used to round to a nonzero total
+    demand (NetworkXUnfeasible) before widths were integer-scaled."""
+    edges = [("ab", "a", "b", 1, 0.5), ("ac", "a", "c", 0, 0.5),
+             ("ad", "a", "d", 0, 0.5)]
+    res = balance_latencies(edges)
+    assert res.overhead == 0                    # pure fanout: no balancing
+    for name, s, d, lat, _ in edges:
+        assert res.potentials[s] - res.potentials[d] >= lat
+        assert res.balance[name] >= 0
+
+
+def test_fractional_widths_match_brute_force():
+    edges = [("ab", "a", "b", 2, 0.5), ("bd", "b", "d", 0, 0.25),
+             ("ad", "a", "d", 0, 0.25)]
+    res = balance_latencies(edges)
+    ref = brute_force_balance(edges, s_max=4)
+    assert res.overhead == pytest.approx(ref) == pytest.approx(0.5)
+    assert res.balance["ad"] == 2               # cheapest reconvergent fix
+
+
+def test_fractional_widths_mixed_with_integers():
+    edges = [("ab", "a", "b", 3, 1.5), ("bd", "b", "d", 0, 0.5),
+             ("ad", "a", "d", 0, 4)]
+    res = balance_latencies(edges)
+    ref = brute_force_balance(edges, s_max=6)
+    assert res.overhead == pytest.approx(ref)
 
 
 @settings(max_examples=40, deadline=None)

@@ -1,10 +1,10 @@
 """Floorplanner + autobridge orchestration + throughput simulation tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import (Boundary, SlotGrid, TaskGraphBuilder, autobridge,
-                        floorplan, simulate)
+                        floorplan, pipeline_headroom, simulate)
 from repro.core.ilp import InfeasibleError
 
 
@@ -84,6 +84,26 @@ def test_hbm_channel_binding_as_resource():
         assert fp.placement[name][0] == 0, "IO must bind to HBM row"
 
 
+def test_zero_capacity_utilization_reports_overflow():
+    """A nonzero load on a zero-capacity resource is overflow, not 0%
+    utilization (regression: it used to report 0.0 and hide the bug)."""
+    from repro.core import Floorplan
+    grid = SlotGrid("g", rows=1, cols=2,
+                    base_capacity={"LUT": 100, "hbm_channels": 0},
+                    slot_caps={(0, 1): {"hbm_channels": 2}}, max_util=1.0)
+    fp = Floorplan(grid=grid, placement={}, cost=0.0, iteration_stats=[],
+                   max_util=1.0,
+                   slot_loads={(0, 0): {"LUT": 50.0, "hbm_channels": 1.0,
+                                        "URAM": 3.0},
+                               (0, 1): {"LUT": 0.0, "hbm_channels": 1.0}})
+    util = fp.utilization()
+    assert util[(0, 0)]["hbm_channels"] == float("inf")   # overflow surfaced
+    assert util[(0, 0)]["LUT"] == pytest.approx(0.5)
+    assert "URAM" not in util[(0, 0)]       # unconstrained resource: omitted
+    assert util[(0, 1)]["hbm_channels"] == pytest.approx(0.5)
+    assert util[(0, 1)]["LUT"] == 0.0       # zero load stays 0, not inf
+
+
 def test_weighted_boundaries_prefer_cheap_crossings():
     """Pod (DCN) boundary is 8x the ICI boundary cost: the cut should go
     through the cheap one."""
@@ -104,10 +124,18 @@ def test_weighted_boundaries_prefer_cheap_crossings():
 # throughput preservation (the paper's central claim, via simulation)
 # ---------------------------------------------------------------------------
 
+def _simulate_piped(g, *, firings, latency, **kw):
+    """Pipelined run with the almost-full round-trip headroom the pipeliner
+    owns (simulate() itself adds no implicit capacity)."""
+    return simulate(g, firings=firings, latency=latency,
+                    extra_capacity=pipeline_headroom(latency), **kw)
+
+
 def test_simulate_chain_throughput():
     g = chain_graph(4, width=32)
     base = simulate(g, firings=100)
-    piped = simulate(g, firings=100, latency={"s0": 2, "s1": 2, "s2": 2})
+    piped = _simulate_piped(g, firings=100,
+                            latency={"s0": 2, "s1": 2, "s2": 2})
     assert not base.deadlocked and not piped.deadlocked
     # latency adds only fill/drain skew, not steady-state cycles
     assert piped.cycles - base.cycles <= 6 + 1
@@ -122,8 +150,9 @@ def test_simulate_unbalanced_vs_balanced_diamond():
     b.invoke("D", area={}, ins=["bd", "ad"])
     g = b.build()
     base = simulate(g, firings=200)
-    unbal = simulate(g, firings=200, latency={"ab": 4, "bd": 4})
-    bal = simulate(g, firings=200, latency={"ab": 4, "bd": 4, "ad": 8})
+    unbal = _simulate_piped(g, firings=200, latency={"ab": 4, "bd": 4})
+    bal = _simulate_piped(g, firings=200,
+                          latency={"ab": 4, "bd": 4, "ad": 8})
     # unbalanced pipelining stalls the source through the shallow skip FIFO
     assert unbal.cycles > 1.5 * base.cycles
     # balanced depths restore full throughput: ~1 firing/cycle + fill skew
@@ -171,7 +200,7 @@ def test_property_balanced_plans_preserve_throughput(seed):
     depth = {e: lat[e] + bal.balance[e] for e in edges}
     n = 150
     base = simulate(g, firings=n)
-    piped = simulate(g, firings=n, latency=depth)
+    piped = _simulate_piped(g, firings=n, latency=depth)
     assert not piped.deadlocked
     fill = sum(depth.values()) + g.num_tasks
     assert piped.cycles <= base.cycles + fill

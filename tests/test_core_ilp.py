@@ -1,7 +1,7 @@
 """Exactness and feasibility tests for the bipartition ILP engine."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.ilp import (BipartitionProblem, Edge, brute_force_bipartition,
                             check_feasible, solve_bipartition, total_cost,

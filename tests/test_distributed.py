@@ -62,7 +62,8 @@ def test_collective_summary_parsing():
 
 PIPELINE_PARITY = textwrap.dedent("""
     import jax, jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
     from repro import configs
     from repro.model import lm
     from repro.distributed import pipeline as pp
@@ -82,8 +83,7 @@ PIPELINE_PARITY = textwrap.dedent("""
     plan = TpuPlan(mode="tapa", n_stages=2, groups_per_stage=1,
                    stage_slots=[(0, 0), (0, 1)], boundary_depth=[2], tp=2,
                    crossing_cost=0.0)
-    rmesh = jax.make_mesh((2, 2, 2), ("stage", "data", "tp"),
-                          axis_types=(AxisType.Auto,) * 3)
+    rmesh = make_mesh((2, 2, 2), ("stage", "data", "tp"))
     pparams = pp.to_pipeline_params(params, 2)
     loss_fn = pp.build_train_loss(cfg, plan, rmesh, n_micro=n_micro,
                                   remat=False)

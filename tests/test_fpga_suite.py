@@ -3,8 +3,7 @@ utilization tables; the co-optimization beats the packed baseline; cycles
 are preserved."""
 import pytest
 
-from repro.core import (analyze_timing, autobridge, packed_placement,
-                        simulate)
+from repro.core import analyze_timing, autobridge, packed_placement
 from repro.fpga import benchmarks as B, u250_grid, u280_grid
 
 U250 = {"LUT": 1728e3, "BRAM": 5376, "DSP": 12288}
@@ -30,6 +29,7 @@ def test_async_mmap_area_delta():
     assert mm["BRAM"] - an["BRAM"] == 29 * 15
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("make,grid", [
     (lambda: B.stencil(4), u250_grid()),
     (lambda: B.cnn(4), u250_grid()),
@@ -49,8 +49,7 @@ def test_tapa_beats_baseline(make, grid):
 def test_cycles_preserved_bucket_sort():
     g = B.bucket_sort()
     plan = autobridge(g, u280_grid(), max_util=0.75)
-    base = simulate(g, firings=200)
-    opt = simulate(g, firings=200, latency=plan.depth)
+    base, opt = plan.verify_throughput(firings=200)
     assert not opt.deadlocked
     # fill/drain only (paper Table 6: 78629 -> 78632)
     assert opt.cycles - base.cycles <= sum(plan.depth.values()) + g.num_tasks

@@ -1,0 +1,240 @@
+"""Event-driven simulator tests: bit-for-bit equivalence against the
+per-cycle reference engine (randomized DAGs, reconvergent diamonds,
+dependency cycles, detached tasks), batch-engine parity, the almost-full
+headroom regression, and a perf smoke proving the engine does O(firings)
+work instead of O(cycles)."""
+import random
+
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.core import (SimJob, TaskGraphBuilder, pipeline_headroom,
+                        simulate, simulate_batch)
+from repro.core.graph import Stream, Task, TaskGraph
+
+
+def _random_graph(rng: random.Random) -> TaskGraph:
+    """Layered DAG with random fanin, depths, control streams, detached
+    sinks, and an occasional reconvergent skip edge."""
+    g = TaskGraph("rand")
+    layers = []
+    nid = 0
+    for li in range(rng.randint(2, 4)):
+        layer = []
+        for _ in range(rng.randint(1, 3)):
+            name = f"t{nid}"
+            nid += 1
+            g.add_task(Task(name=name,
+                            detached=(li > 0 and rng.random() < 0.1)))
+            layer.append(name)
+        layers.append(layer)
+    sid = 0
+    for li in range(1, len(layers)):
+        for dst in layers[li]:
+            for src in rng.sample(layers[li - 1],
+                                  rng.randint(1, len(layers[li - 1]))):
+                g.add_stream(Stream(name=f"e{sid}", src=src, dst=dst,
+                                    depth=rng.randint(0, 3),
+                                    control=(rng.random() < 0.1)))
+                sid += 1
+    if len(layers) >= 3 and rng.random() < 0.7:   # reconvergent skip edge
+        g.add_stream(Stream(name=f"e{sid}", src=layers[0][0],
+                            dst=layers[-1][0], depth=rng.randint(0, 3)))
+    return g
+
+
+def _assert_engines_agree(g, **kw):
+    ev = simulate(g, engine="event", **kw)
+    cy = simulate(g, engine="cycle", **kw)
+    assert (ev.cycles, ev.fired, ev.deadlocked) == \
+        (cy.cycles, cy.fired, cy.deadlocked), (ev, cy)
+    return ev
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 99_999))
+def test_equivalence_random_dags(seed):
+    rng = random.Random(seed)
+    g = _random_graph(rng)
+    lat = {s.name: rng.randint(0, 4) for s in g.streams}
+    extra = {s.name: rng.choice([0, 0, 2, 2 * lat[s.name]])
+             for s in g.streams}
+    ii = {n: rng.randint(1, 4) for n in g.tasks}
+    _assert_engines_agree(g, firings=25, latency=lat, extra_capacity=extra,
+                          ii=ii)
+
+
+def _diamond():
+    b = TaskGraphBuilder("d")
+    for s in ("ab", "bd", "ad"):
+        b.stream(s, width=32, depth=2)
+    b.invoke("A", area={}, outs=["ab", "ad"])
+    b.invoke("B", area={}, ins=["ab"], outs=["bd"])
+    b.invoke("D", area={}, ins=["bd", "ad"])
+    return b.build()
+
+
+@pytest.mark.parametrize("lat,extra,ii", [
+    ({}, {}, {}),                                       # plain
+    ({"ab": 4, "bd": 4}, {}, {}),                       # unbalanced, tight
+    ({"ab": 4, "bd": 4, "ad": 8},
+     {"ab": 8, "bd": 8, "ad": 16}, {}),                 # balanced + headroom
+    ({"ab": 2}, {"ab": 4}, {"A": 3, "D": 2}),           # II mix
+])
+def test_equivalence_reconvergent_diamond(lat, extra, ii):
+    _assert_engines_agree(_diamond(), firings=120, latency=lat,
+                          extra_capacity=extra, ii=ii)
+
+
+def test_equivalence_dependency_cycle_deadlock():
+    """A tokenless feedback cycle deadlocks immediately in both engines."""
+    g = TaskGraph("cyc")
+    g.add_task(Task("a"))
+    g.add_task(Task("b"))
+    g.add_stream(Stream(name="ab", src="a", dst="b"))
+    g.add_stream(Stream(name="ba", src="b", dst="a"))
+    res = _assert_engines_agree(g, firings=10)
+    assert res.deadlocked
+    assert res.fired == {"a": 0, "b": 0}
+
+
+def test_equivalence_detached_tasks():
+    b = TaskGraphBuilder("det")
+    b.stream("s0", width=8)
+    b.stream("s1", width=8)
+    b.invoke("Src", area={}, outs=["s0", "s1"])
+    b.invoke("Sink", area={}, ins=["s0"])
+    b.invoke("Mon", area={}, ins=["s1"], detach=True)
+    g = b.build()
+    res = _assert_engines_agree(g, firings=50, latency={"s1": 3},
+                                extra_capacity={"s1": 6})
+    assert res.fired["Src"] == 50 and res.fired["Sink"] == 50
+    assert res.fired["Mon"] <= 50   # detached: excluded from termination
+
+
+# ---------------------------------------------------------------------------
+# batched engine
+# ---------------------------------------------------------------------------
+
+def test_batch_numpy_matches_event():
+    g = _diamond()
+    rng = random.Random(3)
+    jobs = [SimJob(g)]
+    for _ in range(7):
+        lat = {s.name: rng.randint(0, 4) for s in g.streams}
+        jobs.append(SimJob(g, latency=lat,
+                           extra_capacity=pipeline_headroom(lat),
+                           ii={n: rng.randint(1, 3) for n in g.tasks}))
+    vec = simulate_batch(jobs, firings=60)
+    ref = simulate_batch(jobs, firings=60, backend="event")
+    assert all(r.engine == "numpy-batch" for r in vec)
+    assert all(r.engine == "event" for r in ref)
+    for a, b in zip(vec, ref):
+        assert (a.cycles, a.fired, a.deadlocked) == \
+            (b.cycles, b.fired, b.deadlocked)
+
+
+def test_batch_mixed_topologies_falls_back_to_event():
+    b = TaskGraphBuilder("t2")
+    b.stream("s", width=8)
+    b.invoke("A", area={}, outs=["s"])
+    b.invoke("B", area={}, ins=["s"])
+    other = b.build()
+    results = simulate_batch([SimJob(_diamond()), SimJob(other)], firings=30)
+    assert all(r.engine == "event" for r in results)
+    assert all(not r.deadlocked for r in results)
+
+
+def test_batch_accepts_bare_graphs():
+    out = simulate_batch([_diamond(), _diamond()], firings=40)
+    assert [r.cycles for r in out] == [out[0].cycles] * 2
+    assert all(not r.deadlocked for r in out)
+
+
+def test_explorer_batched_throughput_eval():
+    """explore_floorplans(sim_firings=...) attaches batched simulation
+    results to every feasible candidate, and best_candidate drops
+    deadlocked ones."""
+    from repro.core import SlotGrid, best_candidate, explore_floorplans
+    b = TaskGraphBuilder("chain")
+    for i in range(3):
+        b.stream(f"s{i}", width=64)
+    for i in range(4):
+        b.invoke(f"K{i}", area={"LUT": 100},
+                 ins=[f"s{i-1}"] if i > 0 else [],
+                 outs=[f"s{i}"] if i < 3 else [])
+    g = b.build()
+    grid = SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 150},
+                    max_util=1.0)
+    # 0.3 is infeasible (a 100-LUT task cannot fit in 45), the rest are not
+    cands = explore_floorplans(g, grid, utils=(0.3, 0.8, 1.0),
+                               sim_firings=100)
+    infeasible, feasible = cands[0], [c for c in cands if c.plan is not None]
+    assert infeasible.plan is None and infeasible.sim is None
+    assert infeasible.throughput_preserved is None
+    assert feasible, "expected feasible candidates"
+    for c in feasible:
+        assert c.sim is not None and c.base_sim is not None
+        assert not c.sim.deadlocked
+        assert c.throughput_preserved is True
+        # the shared baseline is simulated once for the whole sweep
+        assert c.base_sim is feasible[0].base_sim
+    assert best_candidate(cands).plan is not None
+
+
+# ---------------------------------------------------------------------------
+# almost-full headroom ownership (regression: no implicit 2*lat capacity)
+# ---------------------------------------------------------------------------
+
+def _chain2(depth):
+    b = TaskGraphBuilder("c2")
+    b.stream("s", width=8, depth=depth)
+    b.invoke("P", area={}, outs=["s"])
+    b.invoke("C", area={}, ins=["s"])
+    return b.build()
+
+
+def test_tight_fifo_stalls_without_headroom():
+    """A 2-deep FIFO with 4 cycles of pipeline latency cannot sustain full
+    throughput: the producer stalls on almost-full.  The old simulator
+    silently added 2*latency capacity and hid this."""
+    g = _chain2(depth=2)
+    stalled = simulate(g, firings=100, latency={"s": 4})
+    healthy = simulate(g, firings=100, latency={"s": 4},
+                       extra_capacity=pipeline_headroom({"s": 4}))
+    assert not stalled.deadlocked and not healthy.deadlocked
+    assert healthy.cycles <= 100 + 6            # fill skew only
+    assert stalled.cycles > 1.8 * healthy.cycles  # real almost-full stall
+    # both engines agree on the stalled schedule too
+    _assert_engines_agree(g, firings=100, latency={"s": 4})
+
+
+def test_zero_depth_fifo_deadlocks_under_correct_capacity():
+    """depth=0 FIFO: the producer can never write.  With the old implicit
+    +2*latency headroom this design simulated as healthy."""
+    g = _chain2(depth=0)
+    res = _assert_engines_agree(g, firings=5, latency={"s": 1})
+    assert res.deadlocked
+    ok = simulate(g, firings=5, latency={"s": 1}, extra_capacity={"s": 2})
+    assert not ok.deadlocked
+
+
+# ---------------------------------------------------------------------------
+# perf smoke: event engine does O(firings) work, not O(cycles)
+# ---------------------------------------------------------------------------
+
+def test_event_engine_steps_scale_with_firings_not_cycles():
+    """II=32 chain: the per-cycle engine scans every task for every one of
+    ~3200 cycles; the event engine processes ~2 events per firing."""
+    b = TaskGraphBuilder("hi_ii")
+    b.stream("s", width=8, depth=4)
+    b.invoke("A", area={}, outs=["s"])
+    b.invoke("B", area={}, ins=["s"])
+    g = b.build()
+    ii = {"A": 32, "B": 32}
+    ev = simulate(g, firings=100, ii=ii, engine="event")
+    cy = simulate(g, firings=100, ii=ii, engine="cycle")
+    assert (ev.cycles, ev.deadlocked) == (cy.cycles, cy.deadlocked)
+    assert ev.cycles > 3000                  # high-II schedule is long...
+    assert ev.steps * 10 <= ev.cycles        # ...but costs >=10x fewer steps
+    assert cy.steps == cy.cycles             # reference scans every cycle
