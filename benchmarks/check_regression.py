@@ -1,0 +1,110 @@
+"""CI benchmark-regression gate.
+
+Compares a freshly produced BENCH_*.json (from ``fmax_suite.py --json`` or
+``throughput.py --json``) against the committed baseline under
+``benchmarks/baselines/`` and exits nonzero when the headline metrics
+regress beyond tolerance:
+
+* fmax suite: average optimized fmax must not drop more than ``--tol``
+  relative to baseline; no simulated deadlocks; no throughput violations.
+* throughput suite: per-design TAPA cycle counts must not grow more than
+  ``--tol`` relative to baseline; every baseline design must still be
+  present.
+
+Usage:
+    python benchmarks/check_regression.py CURRENT.json BASELINE.json [--tol 0.02]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
+    errors = []
+    cs, bs = cur["summary"], base["summary"]
+    floor = bs["opt_avg_mhz"] * (1.0 - tol)
+    if cs["opt_avg_mhz"] < floor:
+        errors.append(
+            f"avg optimized fmax regressed: {cs['opt_avg_mhz']:.1f} MHz "
+            f"< {floor:.1f} MHz (baseline {bs['opt_avg_mhz']:.1f}, tol {tol:.0%})"
+        )
+    if cs.get("sim_deadlocks", 0):
+        errors.append(f"{cs['sim_deadlocks']} design(s) deadlocked in simulation")
+    if cs.get("throughput_violations", 0):
+        errors.append(
+            f"{cs['throughput_violations']} design(s) lost steady-state throughput"
+        )
+    cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
+    for r in base["rows"]:
+        key = (r["name"], r["board"])
+        if key not in cur_rows:
+            errors.append(f"design {key} missing from current run")
+            continue
+        if r["opt_mhz"] > 0 and cur_rows[key]["opt_mhz"] == 0:
+            errors.append(f"design {key} became unroutable")
+    return errors
+
+
+def check_throughput(cur: dict, base: dict, tol: float) -> list[str]:
+    errors = []
+    cur_rows = {r["name"]: r for r in cur["rows"]}
+    for r in base["rows"]:
+        name = r["name"]
+        if name not in cur_rows:
+            errors.append(f"design {name} missing from current run")
+            continue
+        ceiling = r["cycles_tapa"] * (1.0 + tol)
+        got = cur_rows[name]["cycles_tapa"]
+        if got > ceiling:
+            errors.append(
+                f"{name}: simulated cycles regressed {r['cycles_tapa']} -> {got} "
+                f"(tol {tol:.0%})"
+            )
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.02,
+        help="relative tolerance on the gated metric (default 2%%)",
+    )
+    args = ap.parse_args(argv)
+
+    cur, base = _load(args.current), _load(args.baseline)
+    if cur.get("suite") != base.get("suite"):
+        print(
+            f"suite mismatch: current={cur.get('suite')} baseline={base.get('suite')}"
+        )
+        return 2
+    if cur.get("suite") == "fmax_suite":
+        errors = check_fmax(cur, base, args.tol)
+    elif cur.get("suite") == "throughput":
+        errors = check_throughput(cur, base, args.tol)
+    else:
+        print(f"unknown suite {cur.get('suite')!r}")
+        return 2
+
+    if errors:
+        print(f"REGRESSION ({len(errors)} finding(s)) vs {args.baseline}:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"OK: {args.current} within {args.tol:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

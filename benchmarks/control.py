@@ -45,7 +45,8 @@ def main():
             g4v = f"{g4.fmax_mhz:.0f}" if g4.routed else "FAIL"
         except Exception:
             g4v = "INFEAS"
-        fmt = lambda r: f"{r.fmax_mhz:.0f}" if r.routed else "FAIL"
+        def fmt(r):
+            return f"{r.fmax_mhz:.0f}" if r.routed else "FAIL"
         print(f"control,cnn_13x{n},0,"
               f"baseline={fmt(base)} pipe_only={fmt(pipe_only)} "
               f"fp_only={fmt(fp_only)} tapa={fmt(full)} four_slot={g4v}")

@@ -1,53 +1,75 @@
 """Paper §7.3: the 43-design frequency study (headline table).
 
 For every design: baseline = packed placement, no pipelining (the default
-tool flow); TAPA = autobridge co-optimization (floorplan + pipeline +
-balance), sweeping max-util upward if the default 0.70 is infeasible
-(paper §6.3's knob).  Frequencies come from the calibrated physical-design
-surrogate; throughput (cycle) preservation is checked by dataflow
-simulation on a subset (see throughput.py for the full table).
+tool flow); TAPA = the §6.3 joint design-space search over the max-util
+sweep (``explore_design_space`` — all knob points evaluated, Pareto-pruned,
+best frontier candidate kept), replacing the old first-feasible retry loop.
+Frequencies come from the calibrated physical-design surrogate; throughput
+(cycle) preservation is checked by dataflow simulation on *every* run —
+each design's baseline + all candidates share one vectorized
+``simulate_batch`` call.
 
 Paper targets: baseline avg 147 MHz (failures counted as 0), optimized avg
 297 MHz; 16/43 baseline failures, all recovered (avg 274 MHz).
+
+CLI:
+    python benchmarks/fmax_suite.py [--subset fast|full] [--json PATH]
+                                    [--firings N] [--no-sim]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
-from repro.core import (InfeasibleError, analyze_timing, autobridge,
-                        packed_placement)
+from repro.core import (InfeasibleError, SearchSpace, analyze_timing,
+                        explore_design_space, packed_placement)
 from repro.fpga import benchmarks as B, u250_grid, u280_grid
 
 UTIL_SWEEP = (0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.0)
+
+#: small, quick designs exercised by the CI bench-regression gate; the full
+#: 43-design table runs nightly.
+FAST_SUBSET = ("stencil_x2", "stencil_x4", "cnn_13x2", "gaussian_12",
+               "bucket_sort", "page_rank")
+
+#: throughput-preservation firings used by the default path (satisfies the
+#: ROADMAP item: cycles are checked on every run, not a spot-check subset)
+DEFAULT_FIRINGS = 200
 
 
 def grid_for(board: str):
     return u250_grid() if board == "u250" else u280_grid()
 
 
-def run_tapa(graph, grid, seed: int = 0):
-    """autobridge with the §6.3 util sweep; returns (plan, util)."""
-    last = None
-    for u in UTIL_SWEEP:
-        try:
-            return autobridge(graph, grid, max_util=u, seed=seed), u
-        except InfeasibleError as e:
-            last = e
-    raise last
+def run_tapa(graph, grid, seed: int = 0, *, sim_firings: int | None = None):
+    """§6.3 knob search as a joint batched sweep: every util point is
+    evaluated ("implement all candidates in parallel"), throughput-scored in
+    one ``simulate_batch`` call, and the best Pareto-frontier candidate is
+    returned along with the full ``SearchResult``.
+
+    Raises ``InfeasibleError`` when no point yields a routable plan."""
+    space = SearchSpace(seeds=(seed,), utils=UTIL_SWEEP)
+    res = explore_design_space(graph, grid, space=space,
+                               sim_firings=sim_firings)
+    return res.best, res
 
 
-def evaluate(name: str, board: str, graph, sim_firings: int | None = None):
+def evaluate(name: str, board: str, graph,
+             sim_firings: int | None = DEFAULT_FIRINGS):
     grid = grid_for(board)
     base_pl = packed_placement(graph, grid)
     base = analyze_timing(graph, grid, base_pl)
     t0 = time.monotonic()
+    cand = None
     try:
-        plan, util = run_tapa(graph, grid)
-        opt = analyze_timing(graph, grid, plan.floorplan.placement, plan.depth)
+        cand, search = run_tapa(graph, grid, sim_firings=sim_firings)
+        plan, util, opt = cand.plan, cand.point.max_util, cand.report
         wall = time.monotonic() - t0
         overhead = plan.area_overhead
+        frontier = len(search.frontier)
     except InfeasibleError as e:
-        plan, util, wall, overhead = None, None, time.monotonic() - t0, 0.0
+        util, wall, overhead, frontier = None, time.monotonic() - t0, 0.0, 0
         opt = analyze_timing(graph, grid, base_pl)  # placeholder, marked fail
         opt.routed, opt.fmax_mhz, opt.fail_reason = False, 0.0, str(e)
     row = {
@@ -59,21 +81,48 @@ def evaluate(name: str, board: str, graph, sim_firings: int | None = None):
         "opt_fail": None if opt.routed else opt.fail_reason,
         "util": util, "wall_s": wall,
         "buffer_overhead_bits": overhead,
+        "frontier": frontier,
     }
-    if sim_firings and plan is not None:
+    if sim_firings and cand is not None and cand.sim is not None:
         # throughput preservation by dataflow simulation (paper Tables 4-7):
-        # base and optimized variants run as one batched, vectorized call.
-        sim_base, sim_opt = plan.verify_throughput(firings=sim_firings)
-        row["cycles_base"] = sim_base.cycles
-        row["cycles_opt"] = sim_opt.cycles
-        row["cycles_delta"] = sim_opt.cycles - sim_base.cycles
-        row["sim_deadlock"] = sim_opt.deadlocked
+        # scored for every candidate inside the search's batched call.
+        row["cycles_base"] = cand.base_sim.cycles
+        row["cycles_opt"] = cand.sim.cycles
+        row["cycles_delta"] = cand.sim.cycles - cand.base_sim.cycles
+        row["sim_deadlock"] = cand.sim.deadlocked
+        row["throughput_preserved"] = cand.throughput_preserved
     return row
 
 
-def main(verbose: bool = True, sim_firings: int | None = None) -> list[dict]:
+def summarize(rows: list[dict]) -> dict:
+    n = len(rows)
+    fails = [r for r in rows if r["base_fail"]]
+    recovered = [r for r in fails if not r["opt_fail"]]
+    routable = [r for r in rows if not r["base_fail"]]
+    return {
+        "designs": n,
+        "base_avg_mhz": sum(r["base_mhz"] for r in rows) / n,
+        "opt_avg_mhz": sum(r["opt_mhz"] for r in rows) / n,
+        "baseline_fails": len(fails),
+        "recovered": len(recovered),
+        "recovered_avg_mhz": (sum(r["opt_mhz"] for r in recovered)
+                              / len(recovered) if recovered else 0.0),
+        "routable_base_avg_mhz": (sum(r["base_mhz"] for r in routable)
+                                  / max(len(routable), 1)),
+        "sim_deadlocks": sum(1 for r in rows if r.get("sim_deadlock")),
+        "throughput_violations": sum(
+            1 for r in rows if r.get("throughput_preserved") is False),
+        "cycles_delta_total": sum(r.get("cycles_delta", 0) for r in rows),
+    }
+
+
+def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
+         subset: tuple[str, ...] | None = None,
+         json_path: str | None = None) -> list[dict]:
     rows = []
     for name, board, graph in B.autobridge_suite():
+        if subset is not None and name not in subset:
+            continue
         r = evaluate(name, board, graph, sim_firings=sim_firings)
         rows.append(r)
         if verbose:
@@ -83,23 +132,35 @@ def main(verbose: bool = True, sim_firings: int | None = None) -> list[dict]:
                    if "cycles_delta" in r else "")
             print(f"fmax_suite,{r['name']}@{r['board']},{r['wall_s']*1e6:.0f},"
                   f"base={base}MHz opt={opt}MHz util={r['util']}{cyc}")
-    n = len(rows)
-    base_avg = sum(r["base_mhz"] for r in rows) / n
-    opt_avg = sum(r["opt_mhz"] for r in rows) / n
-    fails = [r for r in rows if r["base_fail"]]
-    recovered = [r for r in fails if not r["opt_fail"]]
-    rec_avg = (sum(r["opt_mhz"] for r in recovered) / len(recovered)
-               if recovered else 0.0)
-    routable = [r for r in rows if not r["base_fail"]]
-    print(f"fmax_suite,SUMMARY,0,designs={n} base_avg={base_avg:.0f}MHz "
-          f"(paper 147) opt_avg={opt_avg:.0f}MHz (paper 297) "
-          f"baseline_fails={len(fails)} (paper 16) "
-          f"recovered={len(recovered)} recovered_avg={rec_avg:.0f}MHz "
-          f"(paper 274) routable_base_avg="
-          f"{sum(r['base_mhz'] for r in routable)/max(len(routable),1):.0f}MHz"
-          f" (paper 234)")
+    s = summarize(rows)
+    print(f"fmax_suite,SUMMARY,0,designs={s['designs']} "
+          f"base_avg={s['base_avg_mhz']:.0f}MHz (paper 147) "
+          f"opt_avg={s['opt_avg_mhz']:.0f}MHz (paper 297) "
+          f"baseline_fails={s['baseline_fails']} (paper 16) "
+          f"recovered={s['recovered']} "
+          f"recovered_avg={s['recovered_avg_mhz']:.0f}MHz (paper 274) "
+          f"routable_base_avg={s['routable_base_avg_mhz']:.0f}MHz (paper 234) "
+          f"deadlocks={s['sim_deadlocks']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"suite": "fmax_suite", "sim_firings": sim_firings,
+                       "subset": sorted(subset) if subset else None,
+                       "rows": rows, "summary": s}, f, indent=2)
+        print(f"fmax_suite,JSON,0,wrote {json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--subset", choices=("fast", "full"), default="full",
+                    help="fast = CI bench-regression subset; full = all 43")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write rows + summary as JSON (BENCH_fmax.json)")
+    ap.add_argument("--firings", type=int, default=DEFAULT_FIRINGS,
+                    help="throughput-sim firings per task (0 disables)")
+    ap.add_argument("--no-sim", action="store_true",
+                    help="skip throughput simulation entirely")
+    args = ap.parse_args()
+    main(sim_firings=None if args.no_sim else (args.firings or None),
+         subset=FAST_SUBSET if args.subset == "fast" else None,
+         json_path=args.json_path)

@@ -37,7 +37,8 @@ def main():
                  if opt.routed else "FAIL")
         except InfeasibleError:
             o = "INFEAS"
-        bram = lambda g: g.total_area().get("BRAM", 0)
+        def bram(g):
+            return g.total_area().get("BRAM", 0)
         bb = f"{base.fmax_mhz:.0f}/{base.hbm_clk_mhz:.0f}MHz" \
             if base.routed else "FAIL"
         print(f"hbm_opts,{name},0,orig={bb} opt={o} "

@@ -2,16 +2,26 @@
 baseline vs TAPA-pipelined+balanced — throughput must be preserved
 (delta = fill/drain skew only, mirroring the paper's +10 cycles /1e5).
 
-Each design's (baseline, optimized) pair runs as one ``simulate_batch``
-call: the two variants share the topology, so the simulator vectorizes
-them across variants instead of looping cycles twice in Python."""
+Each design now runs through the joint design-space searcher over a small
+util grid: the shared unpipelined baseline plus every candidate are scored
+in one ``simulate_batch`` call (shared topology -> one vectorized NumPy
+sweep), and the reported plan is the best Pareto-frontier candidate.
+
+CLI:
+    python benchmarks/throughput.py [--json PATH] [--firings N]
+"""
 from __future__ import annotations
 
-from repro.core import autobridge
+import argparse
+import json
+
+from repro.core import SearchSpace, explore_design_space
 from repro.fpga import benchmarks as B, u250_grid, u280_grid
 
+DEFAULT_FIRINGS = 300
 
-def main():
+
+def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None):
     designs = [
         ("cnn_13x4", B.cnn(4), u250_grid()),
         ("gaussian_12", B.gaussian(12), u250_grid()),
@@ -19,14 +29,46 @@ def main():
         ("page_rank", B.page_rank(), u280_grid()),
         ("stencil_x4", B.stencil(4), u250_grid()),
     ]
+    rows = []
     for name, graph, grid in designs:
-        plan = autobridge(graph, grid, max_util=0.75)
-        base, opt = plan.verify_throughput(firings=300)
-        assert not opt.deadlocked, name
-        print(f"throughput,{name},0,cycles_base={base.cycles} "
-              f"cycles_tapa={opt.cycles} "
-              f"delta={opt.cycles - base.cycles} "
-              f"overhead_bits={plan.area_overhead:.0f}")
+        space = SearchSpace(utils=(0.70, 0.75, 0.80))
+        res = explore_design_space(graph, grid, space=space,
+                                   sim_firings=firings)
+        cand = res.best
+        assert not cand.sim.deadlocked, name
+        assert cand.throughput_preserved, name
+        row = {
+            "name": name,
+            "cycles_base": cand.base_sim.cycles,
+            "cycles_tapa": cand.sim.cycles,
+            "delta": cand.sim.cycles - cand.base_sim.cycles,
+            "overhead_bits": cand.plan.area_overhead,
+            "util": cand.point.max_util,
+            "frontier": len(res.frontier),
+        }
+        rows.append(row)
+        print(f"throughput,{name},0,cycles_base={row['cycles_base']} "
+              f"cycles_tapa={row['cycles_tapa']} "
+              f"delta={row['delta']} "
+              f"overhead_bits={row['overhead_bits']:.0f}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"suite": "throughput", "firings": firings,
+                       "rows": rows}, f, indent=2)
+        print(f"throughput,JSON,0,wrote {json_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write rows as JSON (BENCH_throughput.json)")
+    ap.add_argument("--firings", type=int, default=DEFAULT_FIRINGS)
+    args = ap.parse_args()
+    if args.firings <= 0:
+        ap.error("--firings must be positive (the cycle columns ARE the "
+                 "benchmark; use fmax_suite.py --no-sim for a sim-free run)")
+    run(firings=args.firings, json_path=args.json_path)
 
 
 if __name__ == "__main__":

@@ -6,12 +6,14 @@ from .balance import BalanceResult, CycleError, balance_graph, balance_latencies
 from .devicegrid import Boundary, SlotGrid
 from .floorplan import Floorplan, floorplan
 from .graph import Stream, Task, TaskGraph, TaskGraphBuilder
-from .explorer import Candidate, best_candidate, explore_floorplans
+from .explorer import (Candidate, SearchPoint, SearchResult, SearchSpace,
+                       best_candidate, explore_design_space,
+                       explore_floorplans, pareto_frontier, pareto_indices)
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing, packed_placement
 from .ilp import InfeasibleError
 from .pipelining import PipelineAssignment, assign_pipelining
-from .simulate import (SimJob, SimResult, pipeline_headroom, simulate,
-                       simulate_batch)
+from .simulate import (SimJob, SimResult, StreamProfile, pipeline_headroom,
+                       simulate, simulate_batch)
 
 __all__ = [
     "Plan", "autobridge", "BalanceResult", "CycleError", "balance_graph",
@@ -19,6 +21,9 @@ __all__ = [
     "Stream", "Task", "TaskGraph", "TaskGraphBuilder", "InfeasibleError",
     "PipelineAssignment", "assign_pipelining",
     "Candidate", "best_candidate", "explore_floorplans",
+    "SearchPoint", "SearchResult", "SearchSpace", "explore_design_space",
+    "pareto_frontier", "pareto_indices",
     "PhysicalModel", "TimingReport", "analyze_timing", "packed_placement",
-    "SimJob", "SimResult", "pipeline_headroom", "simulate", "simulate_batch",
+    "SimJob", "SimResult", "StreamProfile", "pipeline_headroom", "simulate",
+    "simulate_batch",
 ]

@@ -84,7 +84,15 @@ def autobridge(graph: TaskGraph, grid: SlotGrid, *,
                exact_threshold: int = 22,
                n_starts: int = 8,
                max_feedback: int = 8,
-               time_limit_s: float = 6.0) -> Plan:
+               time_limit_s: float = 6.0,
+               row_weight: float = 1.0,
+               col_weight: float = 1.0,
+               depth_scale: float = 1.0) -> Plan:
+    # co-optimization knobs beyond max-util (joint design-space search,
+    # §6.3 generalized): realized as a scaled working grid, so the whole
+    # floorplan->pipeline->balance chain sees consistent weights/depths.
+    grid = grid.with_knobs(row_weight=row_weight, col_weight=col_weight,
+                           depth_scale=depth_scale)
     co_located: list[set[str]] = [set(g) for g in same_slot]
     demoted: set[str] = set()      # streams demoted to control (last resort)
     pending_cycle: set[str] | None = None

@@ -10,9 +10,6 @@ relative cost of a wire/stream crossing it) and a default *pipeline depth*
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
-
-from .graph import Area
 
 
 @dataclasses.dataclass
@@ -72,6 +69,36 @@ class SlotGrid:
 
     def slots(self) -> list[tuple[int, int]]:
         return [(r, c) for r in range(self.rows) for c in range(self.cols)]
+
+    def with_knobs(self, *, row_weight: float = 1.0, col_weight: float = 1.0,
+                   depth_scale: float = 1.0) -> "SlotGrid":
+        """A copy of the grid with co-optimization knobs applied (the joint
+        design-space search axes beyond max-util, paper §6.3 generalized):
+
+        * ``row_weight`` / ``col_weight`` scale the crossing cost of row/col
+          boundaries in the floorplan objective — the *ratio* trades die
+          (SLR) crossings against column crossings;
+        * ``depth_scale`` scales every boundary's inserted pipeline depth
+          (more registers shorten routed segments at the cost of buffer
+          area and fill/drain skew).  Nonzero depths stay >= 1.
+
+        Physical delays (``delay_ns``) are device properties and are never
+        scaled.  With all knobs at 1.0 the grid is returned unchanged."""
+        if row_weight == 1.0 and col_weight == 1.0 and depth_scale == 1.0:
+            return self
+
+        def scaled(bs: list[Boundary], w: float) -> list[Boundary]:
+            return [Boundary(weight=b.weight * w,
+                             pipeline_depth=(max(1, round(b.pipeline_depth
+                                                          * depth_scale))
+                                             if b.pipeline_depth else 0),
+                             delay_ns=b.delay_ns)
+                    for b in bs]
+
+        return dataclasses.replace(
+            self,
+            row_boundaries=scaled(self.row_boundaries, row_weight),
+            col_boundaries=scaled(self.col_boundaries, col_weight))
 
     # -- distances ---------------------------------------------------------
     def crossing_weight(self, a: tuple[int, int], b: tuple[int, int]) -> float:

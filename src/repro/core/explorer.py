@@ -1,24 +1,118 @@
-"""Multi-floorplan candidate generation (paper §6.3).
+"""Batched design-space search over co-optimization knobs (paper §6.3++).
 
-HBM designs trade local logic pressure against global routing pressure; the
-paper sweeps the per-slot max-utilization knob to generate a set of
-Pareto-optimal floorplans and implements all of them in parallel, keeping
-the best.  We do the same: sweep ``max_util``, run the full
-floorplan->pipeline->balance co-optimization for each value, score every
-candidate with the physical model (FPGA) or the roofline step-time model
-(TPU), and return all candidates sorted by score.
+The paper's multi-floorplan methodology "implements all candidates in
+parallel and keeps the best", sweeping the per-slot max-utilization knob.
+This module generalizes that single axis into a *joint* search space:
+
+    seed x max_util x row/col boundary weight x pipeline depth scale
+
+``SearchSpace`` enumerates joint configurations (full grid or random
+sampling); ``explore_design_space`` runs the floorplan -> pipeline ->
+balance co-optimization per point, scores every feasible candidate with the
+physical model, checks all candidates' throughput in a handful of
+``simulate_batch`` calls (the candidates share the design's topology, so
+hundreds of variants vectorize into one NumPy sweep), and prunes the result
+to the Pareto frontier over (fmax, area overhead, simulated cycles).
+
+Two structural facts keep the search cheap:
+
+  * the floorplan ILP is invariant to ``depth_scale`` (register depth never
+    appears in the partitioning objective), so depth variants of one
+    (seed, util, weights) cell reuse the expensive floorplan and only re-run
+    pipelining + balancing;
+  * throughput evaluation is batched: one ``simulate_batch`` call scores the
+    shared unpipelined baseline plus every feasible candidate.
+
+With ``fifo_sizing=True`` frontier candidates are additionally profiled by
+the event engine (per-stream occupancy histograms from the push/pop logs)
+and their FIFO headroom re-sized to the *observed* peak occupancy instead
+of the uniform ``2*latency`` round-trip term — trimming to the observed
+peak provably preserves the simulated schedule, so the verification batch
+must reproduce the same cycle count.
+
+``explore_floorplans`` remains as a thin single-axis compatibility wrapper.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
-from typing import Callable
+import itertools
+import random
+from typing import Callable, Sequence
 
 from .autobridge import Plan, autobridge
+from .balance import CycleError, balance_graph
 from .devicegrid import SlotGrid
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing
 from .graph import TaskGraph
 from .ilp import InfeasibleError
-from .simulate import SimJob, SimResult, simulate_batch
+from .pipelining import assign_pipelining
+from .simulate import (SimJob, SimResult, StreamProfile, simulate,
+                       simulate_batch)
+
+#: the paper's §6.3 max-util sweep (Table 10)
+DEFAULT_UTILS = (0.55, 0.60, 0.65, 0.70, 0.75, 0.80, 0.85)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchPoint:
+    """One joint knob configuration."""
+    seed: int = 0
+    max_util: float = 0.70
+    row_weight: float = 1.0
+    col_weight: float = 1.0
+    depth_scale: float = 1.0
+
+    @property
+    def floorplan_key(self) -> tuple:
+        """Axes the floorplan depends on.  ``depth_scale`` only affects
+        pipelining/balancing, so depth variants share one floorplan."""
+        return (self.seed, self.max_util, self.row_weight, self.col_weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Axis values of the joint search.  ``grid_points`` enumerates the full
+    cartesian product; ``sample`` draws points without replacement (uniform
+    over the product) for spaces too big to sweep exhaustively."""
+    seeds: tuple[int, ...] = (0,)
+    utils: tuple[float, ...] = DEFAULT_UTILS
+    row_weights: tuple[float, ...] = (1.0,)
+    col_weights: tuple[float, ...] = (1.0,)
+    depth_scales: tuple[float, ...] = (1.0,)
+
+    @property
+    def size(self) -> int:
+        return (len(self.seeds) * len(self.utils) * len(self.row_weights)
+                * len(self.col_weights) * len(self.depth_scales))
+
+    def _decode(self, idx: int) -> SearchPoint:
+        """Mixed-radix decode of a flat product index (depth_scale fastest,
+        seed slowest — matches ``itertools.product`` order)."""
+        axes = (self.seeds, self.utils, self.row_weights, self.col_weights,
+                self.depth_scales)
+        vals = []
+        for ax in reversed(axes):
+            idx, r = divmod(idx, len(ax))
+            vals.append(ax[r])
+        d, c, w, u, s = vals
+        return SearchPoint(seed=s, max_util=u, row_weight=w, col_weight=c,
+                           depth_scale=d)
+
+    def grid_points(self) -> list[SearchPoint]:
+        return [SearchPoint(seed=s, max_util=u, row_weight=rw, col_weight=cw,
+                            depth_scale=d)
+                for s, u, rw, cw, d in itertools.product(
+                    self.seeds, self.utils, self.row_weights,
+                    self.col_weights, self.depth_scales)]
+
+    def sample(self, n: int, *, seed: int = 0) -> list[SearchPoint]:
+        """``n`` distinct points drawn uniformly from the product (the whole
+        space, in grid order, when ``n >= size``)."""
+        if n >= self.size:
+            return self.grid_points()
+        rng = random.Random(seed)
+        return [self._decode(i) for i in rng.sample(range(self.size), n)]
 
 
 @dataclasses.dataclass
@@ -32,6 +126,17 @@ class Candidate:
     sim: SimResult | None = None
     #: cycles of the unpipelined baseline design (shared across candidates)
     base_sim: SimResult | None = None
+    #: the joint knob configuration that produced this candidate
+    point: SearchPoint | None = None
+    #: event-engine occupancy profiles (``fifo_sizing``, frontier only)
+    profile: dict[str, StreamProfile] | None = None
+    #: per-stream FIFO headroom re-sized to observed peak occupancy
+    #: (reverted to None if the verification batch saw different cycles)
+    sized_capacity: dict[str, int] | None = None
+    #: verified run of the re-sized design — cycle-identical to the
+    #: uniform-headroom reference at the same firing count, or None if the
+    #: sizing was reverted
+    sized_sim: SimResult | None = None
 
     @property
     def fmax(self) -> float:
@@ -48,48 +153,272 @@ class Candidate:
         skew = sum(self.plan.depth.values()) + self.plan.graph.num_tasks
         return self.sim.cycles <= self.base_sim.cycles + skew
 
+    @property
+    def fifo_savings_bits(self) -> float | None:
+        """Width-weighted capacity saved by profile-driven sizing vs the
+        uniform ``2*latency`` headroom (None until sized)."""
+        if self.sized_capacity is None or self.plan is None:
+            return None
+        width = {s.name: s.width for s in self.plan.graph.streams}
+        uniform = self.plan.sim_extra_capacity
+        return sum((uniform.get(n, 0) - e) * width.get(n, 0.0)
+                   for n, e in self.sized_capacity.items())
+
+
+# ---------------------------------------------------------------------------
+# Pareto pruning
+# ---------------------------------------------------------------------------
+
+def pareto_indices(vectors: Sequence[tuple]) -> list[int]:
+    """Indices of non-dominated vectors; every objective is maximized.
+
+    ``a`` dominates ``b`` iff ``a >= b`` element-wise with at least one
+    strict inequality — so points with *identical* vectors never dominate
+    each other and are all kept (tie handling)."""
+    keep = []
+    for i, vi in enumerate(vectors):
+        dominated = False
+        for j, vj in enumerate(vectors):
+            if j == i:
+                continue
+            if (all(a >= b for a, b in zip(vj, vi))
+                    and any(a > b for a, b in zip(vj, vi))):
+                dominated = True
+                break
+        if not dominated:
+            keep.append(i)
+    return keep
+
+
+def pareto_frontier(cands: Sequence[Candidate]) -> list[Candidate]:
+    """Feasible, routed, non-deadlocked candidates that are Pareto-optimal
+    over (fmax up, area_overhead down, simulated cycles down)."""
+    ok = [c for c in cands
+          if c.plan is not None and c.report and c.report.routed
+          and (c.sim is None or not c.sim.deadlocked)]
+    vecs = [(c.report.fmax_mhz, -c.plan.area_overhead,
+             -(c.sim.cycles if c.sim is not None else 0)) for c in ok]
+    return [ok[i] for i in pareto_indices(vecs)]
+
+
+# ---------------------------------------------------------------------------
+# joint search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchResult:
+    #: every evaluated configuration, in enumeration order (failures kept —
+    #: the paper's Table 10 reports those as 'Failed')
+    candidates: list[Candidate]
+    #: Pareto-optimal subset over (fmax, area_overhead, sim cycles)
+    frontier: list[Candidate]
+    #: number of ``simulate_batch`` calls the search issued
+    sim_calls: int
+    #: number of configurations evaluated
+    space_size: int
+
+    @property
+    def best(self) -> Candidate:
+        """Highest-fmax routable candidate (frontier first)."""
+        return best_candidate(self.frontier or self.candidates)
+
+
+def _derive_depth_variant(graph: TaskGraph, grid: SlotGrid, base: Plan,
+                          pt: SearchPoint,
+                          **ab_kwargs) -> Plan | InfeasibleError:
+    """Re-pipeline + re-balance ``base``'s floorplan under ``pt``'s depth
+    scale.  The floorplan is depth-invariant, so this skips the ILP; a
+    (theoretically unreachable) balance cycle falls back to a full
+    autobridge run with the point's knobs."""
+    sgrid = grid.with_knobs(row_weight=pt.row_weight, col_weight=pt.col_weight,
+                            depth_scale=pt.depth_scale)
+    fp = dataclasses.replace(base.floorplan, grid=sgrid)
+    pa = assign_pipelining(graph, fp)
+    try:
+        bal = balance_graph(graph, pa.lat)
+    except CycleError:
+        try:
+            return autobridge(graph, grid, max_util=pt.max_util, seed=pt.seed,
+                              row_weight=pt.row_weight,
+                              col_weight=pt.col_weight,
+                              depth_scale=pt.depth_scale, **ab_kwargs)
+        except InfeasibleError as err:
+            return err
+    depth = {name: pa.lat[name] + bal.balance[name] for name in pa.lat}
+    width = {s.name: s.width for s in graph.streams}
+    overhead = sum(d * width[n] for n, d in depth.items())
+    return Plan(graph=graph, floorplan=fp, pipelining=pa, balancing=bal,
+                depth=depth, area_overhead=overhead,
+                feedback_rounds=base.feedback_rounds,
+                co_located=base.co_located,
+                demoted_streams=list(base.demoted_streams))
+
+
+def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
+                         space: SearchSpace | None = None,
+                         mode: str = "grid",
+                         n_samples: int = 64,
+                         sample_seed: int = 0,
+                         model: PhysicalModel = PhysicalModel(),
+                         score: Callable[[Plan], TimingReport] | None = None,
+                         sim_firings: int | None = None,
+                         fifo_sizing: bool = False,
+                         fifo_firings: int | None = None,
+                         **ab_kwargs) -> SearchResult:
+    """Joint batched design-space search (see module docstring).
+
+    mode         — "grid" sweeps the full cartesian product of ``space``;
+                   "random" draws ``n_samples`` distinct points from it
+    sim_firings  — when set, score *all* feasible candidates' throughput in
+                   one vectorized ``simulate_batch`` call (plus the shared
+                   unpipelined baseline)
+    fifo_sizing  — profile frontier candidates with the event engine and
+                   re-size their FIFO headroom to observed peak occupancy;
+                   one more batch call verifies cycles are unchanged
+    ab_kwargs    — forwarded to ``autobridge`` (e.g. ``same_slot``)
+    """
+    space = space or SearchSpace()
+    if mode == "grid":
+        points = space.grid_points()
+    elif mode == "random":
+        points = space.sample(n_samples, seed=sample_seed)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    cands: list[Candidate] = []
+    plans: dict[tuple, tuple[float, Plan | InfeasibleError]] = {}
+    # autobridge's cycle-breaking last resort mutates the input graph
+    # (stream demotion, autobridge.py) — under a joint sweep that would
+    # leak one point's demotion into every later point, the shared
+    # baseline, and the caller's graph.  Snapshot the control flags and
+    # confine any demotion to a per-candidate graph copy.
+    ctrl0 = [s.control for s in graph.streams]
+
+    def _restore_ctrl() -> bool:
+        changed = False
+        for s, c0 in zip(graph.streams, ctrl0):
+            if s.control != c0:
+                s.control = c0
+                changed = True
+        return changed
+
+    def _run_autobridge(g: TaskGraph, pt: SearchPoint):
+        return autobridge(g, grid, max_util=pt.max_util, seed=pt.seed,
+                          row_weight=pt.row_weight, col_weight=pt.col_weight,
+                          depth_scale=pt.depth_scale, **ab_kwargs)
+
+    for pt in points:
+        entry = plans.get(pt.floorplan_key)
+        if entry is None:
+            try:
+                made = _run_autobridge(graph, pt)
+            except InfeasibleError as err:
+                made = err
+            if _restore_ctrl() and not isinstance(made, InfeasibleError):
+                # this point needs the demotion: re-run on a private copy so
+                # the candidate keeps a consistent graph while the shared
+                # one stays pristine (simulate_batch detects the topology
+                # split and falls back to per-job event simulation for it)
+                try:
+                    made = _run_autobridge(copy.deepcopy(graph), pt)
+                except InfeasibleError as err:
+                    made = err
+                _restore_ctrl()
+            entry = (pt.depth_scale, made)
+            plans[pt.floorplan_key] = entry
+        base_scale, base = entry
+        if isinstance(base, InfeasibleError):
+            cands.append(Candidate(max_util=pt.max_util, plan=None,
+                                   report=None, error=str(base), point=pt))
+            continue
+        if pt.depth_scale == base_scale:
+            plan = base
+        else:
+            plan = _derive_depth_variant(base.graph, grid, base, pt,
+                                         **ab_kwargs)
+            if isinstance(plan, InfeasibleError):
+                cands.append(Candidate(max_util=pt.max_util, plan=None,
+                                       report=None, error=str(plan),
+                                       point=pt))
+                continue
+        if score is not None:
+            rep = score(plan)
+        else:
+            rep = analyze_timing(plan.graph, grid, plan.floorplan.placement,
+                                 plan.depth, model)
+        cands.append(Candidate(max_util=pt.max_util, plan=plan, report=rep,
+                               point=pt))
+
+    sim_calls = 0
+    if sim_firings:
+        feasible = [c for c in cands if c.plan is not None]
+        if feasible:
+            jobs = [SimJob(graph)] + [c.plan.sim_job() for c in feasible]
+            results = simulate_batch(jobs, firings=sim_firings)
+            sim_calls += 1
+            base_res = results[0]
+            for c, res in zip(feasible, results[1:]):
+                c.sim = res
+                c.base_sim = base_res
+
+    frontier = pareto_frontier(cands)
+
+    if fifo_sizing and frontier:
+        firings = fifo_firings or sim_firings or 200
+        jobs = []
+        for c in frontier:
+            g = c.plan.graph
+            prof = simulate(g, firings=firings, latency=c.plan.depth,
+                            extra_capacity=c.plan.sim_extra_capacity,
+                            profile=True)
+            c.profile = prof.profiles
+            # observed-peak trimming: occupancy never exceeded peak, so
+            # capacity=peak admits the exact same firing schedule
+            declared = {s.name: int(s.depth) for s in g.streams}
+            c.sized_capacity = {name: max(0, p.peak - declared[name])
+                                for name, p in prof.profiles.items()}
+            # sized variant paired with its uniform-headroom reference at
+            # the *same* firing count, so the verdict below is well-defined
+            # even when fifo_firings != sim_firings
+            jobs.append(SimJob(g, latency=dict(c.plan.depth),
+                               extra_capacity=dict(c.sized_capacity)))
+            jobs.append(c.plan.sim_job())
+        results = simulate_batch(jobs, firings=firings)
+        sim_calls += 1
+        for i, c in enumerate(frontier):
+            sized, uniform = results[2 * i], results[2 * i + 1]
+            if sized.deadlocked or sized.cycles != uniform.cycles:
+                # trimming broke the schedule (theoretically unreachable):
+                # revert rather than hand out an unverified sizing
+                c.sized_capacity = None
+                c.sized_sim = None
+            else:
+                c.sized_sim = sized
+
+    return SearchResult(candidates=cands, frontier=frontier,
+                        sim_calls=sim_calls, space_size=len(points))
+
+
+# ---------------------------------------------------------------------------
+# single-axis compatibility wrapper (paper §6.3 verbatim)
+# ---------------------------------------------------------------------------
 
 def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
-                       utils: tuple[float, ...] = (0.55, 0.60, 0.65, 0.70,
-                                                   0.75, 0.80, 0.85),
+                       utils: tuple[float, ...] = DEFAULT_UTILS,
                        seed: int = 0,
                        model: PhysicalModel = PhysicalModel(),
                        score: Callable[[Plan], TimingReport] | None = None,
                        sim_firings: int | None = None,
                        **ab_kwargs) -> list[Candidate]:
-    """Generate one candidate per max-util point ("implement all of them in
-    parallel", paper Table 10).  Infeasible points are kept as failed
-    candidates — the paper's Table 10 reports those as 'Failed'.
-
-    With ``sim_firings`` set, every feasible candidate's throughput is
-    checked by dataflow simulation in *one* ``simulate_batch`` call (the
-    candidates share the design's topology, so the sweep vectorizes across
-    max-util points instead of re-running the per-cycle loop per plan).
-    """
-    out: list[Candidate] = []
-    for u in utils:
-        try:
-            plan = autobridge(graph, grid, max_util=u, seed=seed, **ab_kwargs)
-        except InfeasibleError as err:
-            out.append(Candidate(max_util=u, plan=None, report=None,
-                                 error=str(err)))
-            continue
-        if score is not None:
-            rep = score(plan)
-        else:
-            rep = analyze_timing(graph, grid, plan.floorplan.placement,
-                                 plan.depth, model)
-        out.append(Candidate(max_util=u, plan=plan, report=rep))
-    if sim_firings:
-        feasible = [c for c in out if c.plan is not None]
-        if feasible:
-            jobs = [SimJob(graph)] + [c.plan.sim_job() for c in feasible]
-            results = simulate_batch(jobs, firings=sim_firings)
-            base = results[0]
-            for c, res in zip(feasible, results[1:]):
-                c.sim = res
-                c.base_sim = base
-    return out
+    """Single-axis max-util sweep: one candidate per util point, in sweep
+    order, infeasible points kept as failed candidates (paper Table 10).
+    Thin wrapper over ``explore_design_space`` with every other axis pinned
+    to its default."""
+    space = SearchSpace(seeds=(seed,), utils=tuple(utils))
+    res = explore_design_space(graph, grid, space=space, model=model,
+                               score=score, sim_firings=sim_firings,
+                               **ab_kwargs)
+    return res.candidates
 
 
 def best_candidate(cands: list[Candidate]) -> Candidate:

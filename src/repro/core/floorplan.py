@@ -187,8 +187,6 @@ def _floorplan_once(graph: TaskGraph, grid: SlotGrid, *,
             dim = "row" if max_r > 1 else "col"
         else:
             dim = "row" if max_r >= max_c else "col"
-        rng = row_rng if dim == "row" else col_rng
-        other = col_rng if dim == "row" else row_rng
         bounds = rb if dim == "row" else cb
 
         # current slots = distinct (row_rng, col_rng) pairs

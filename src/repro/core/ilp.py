@@ -376,7 +376,6 @@ def _branch_and_bound(p: BipartitionProblem, keys: list[str],
         adj[e.u].append(e)
         adj[e.v].append(e)
     order = sorted(range(n), key=lambda i: -weight[i])
-    pos = {v: i for i, v in enumerate(order)}
 
     # minimum possible cost of all edges not yet fully decided at depth t:
     # precompute suffix of "free" minima

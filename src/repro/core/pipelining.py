@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 
-from .devicegrid import SlotGrid
 from .floorplan import Floorplan
 from .graph import TaskGraph
 

@@ -64,6 +64,29 @@ except ModuleNotFoundError:  # pragma: no cover
 
 
 @dataclasses.dataclass
+class StreamProfile:
+    """Observed FIFO pressure of one stream (event engine, paper §6.3 knob
+    guidance): how full the FIFO actually ran, so callers can size capacity
+    from measured occupancy instead of the uniform ``2*latency`` headroom.
+
+    Occupancy semantics match the engine: a token occupies a slot from the
+    cycle it is pushed through the cycle it is popped (the slot becomes
+    reusable one cycle after the pop)."""
+    name: str
+    capacity: int
+    #: maximum occupancy ever reached
+    peak: int
+    #: time-weighted mean occupancy over the simulated horizon
+    mean: float
+    #: cycles spent completely full (producer-visible back-pressure)
+    full_cycles: int
+    #: cycles spent empty (consumer starvation)
+    empty_cycles: int
+    #: occupancy histogram: level -> cycles spent at that level
+    hist: dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class SimResult:
     cycles: int
     fired: dict[str, int]
@@ -72,6 +95,8 @@ class SimResult:
     #: engine; cycles scanned for the per-cycle engines).
     steps: int = 0
     engine: str = "event"
+    #: per-stream occupancy/stall profiles (event engine with profile=True)
+    profiles: dict[str, StreamProfile] | None = None
 
 
 @dataclasses.dataclass
@@ -123,7 +148,52 @@ class _Model:
 # event-driven engine
 # ---------------------------------------------------------------------------
 
-def _simulate_event(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
+def _profiles_from_logs(m: _Model, push_times: Mapping[str, list[int]],
+                        pop_times: Mapping[str, list[int]],
+                        cycles: int) -> dict[str, StreamProfile]:
+    """Occupancy histograms from the engine's append-only push/pop logs.
+
+    A token pushed at cycle u occupies a slot during cycles [u, pop_u]; the
+    slot is visible as free again at pop_u + 1 (``qt[k] + 1`` in the engine).
+    One merge-sweep per stream over the two already-sorted logs."""
+    out: dict[str, StreamProfile] = {}
+    horizon = max(cycles, 0)
+    for s in m.data:
+        name = s.name
+        deltas: dict[int, int] = {}
+        for t in push_times[name]:
+            deltas[t] = deltas.get(t, 0) + 1
+        for t in pop_times[name]:
+            deltas[t + 1] = deltas.get(t + 1, 0) - 1
+        hist: dict[int, int] = {}
+        occ = peak = 0
+        area = 0
+        prev = 0
+        for t in sorted(deltas):
+            if t >= horizon:
+                break
+            if t > prev:
+                span = t - prev
+                hist[occ] = hist.get(occ, 0) + span
+                area += occ * span
+            occ += deltas[t]
+            peak = max(peak, occ)
+            prev = max(prev, t)
+        if horizon > prev:
+            span = horizon - prev
+            hist[occ] = hist.get(occ, 0) + span
+            area += occ * span
+        cap = m.cap[name]
+        out[name] = StreamProfile(
+            name=name, capacity=cap, peak=peak,
+            mean=area / horizon if horizon else 0.0,
+            full_cycles=hist.get(cap, 0) if peak >= cap else 0,
+            empty_cycles=hist.get(0, 0), hist=hist)
+    return out
+
+
+def _simulate_event(m: _Model, *, firings: int, max_cycles: int,
+                    profile: bool = False) -> SimResult:
     names = m.names
     want = firings
     fired = {n: 0 for n in names}
@@ -132,10 +202,16 @@ def _simulate_event(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
     push_times: dict[str, list[int]] = {s.name: [] for s in m.data}
     pop_times: dict[str, list[int]] = {s.name: [] for s in m.data}
 
+    def finish(res: SimResult) -> SimResult:
+        if profile:
+            res.profiles = _profiles_from_logs(m, push_times, pop_times,
+                                               res.cycles)
+        return res
+
     remaining = sum(1 for n in names if not m.detached[n] and want > 0)
     if remaining == 0:
-        return SimResult(cycles=0, fired=fired, deadlocked=False, steps=0,
-                         engine="event")
+        return finish(SimResult(cycles=0, fired=fired, deadlocked=False,
+                                steps=0, engine="event"))
 
     def bound(n: str) -> int | None:
         """Earliest cycle at which task n's next firing can happen, or None
@@ -213,11 +289,11 @@ def _simulate_event(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
             schedule(m.producer[s])
 
     if remaining == 0:
-        return SimResult(cycles=end_time + 1, fired=fired, deadlocked=False,
-                         steps=steps, engine="event")
+        return finish(SimResult(cycles=end_time + 1, fired=fired,
+                                deadlocked=False, steps=steps, engine="event"))
     if truncated:
-        return SimResult(cycles=max_cycles, fired=fired, deadlocked=True,
-                         steps=steps, engine="event")
+        return finish(SimResult(cycles=max_cycles, fired=fired,
+                                deadlocked=True, steps=steps, engine="event"))
     # Deadlock: replicate the per-cycle engine's detection cycle — the first
     # quiet cycle with every FIFO head visible and every II window elapsed.
     # next_free >= last fire + 1 for every task that ever fired (II clamped
@@ -228,8 +304,8 @@ def _simulate_event(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
         if pops < pushes:                          # head = oldest unpopped
             t_dead = max(t_dead,
                          push_times[s.name][pops] + 1 + m.lat[s.name])
-    return SimResult(cycles=min(t_dead + 1, max_cycles), fired=fired,
-                     deadlocked=True, steps=steps, engine="event")
+    return finish(SimResult(cycles=min(t_dead + 1, max_cycles), fired=fired,
+                            deadlocked=True, steps=steps, engine="event"))
 
 
 # ---------------------------------------------------------------------------
@@ -292,7 +368,8 @@ def simulate(graph: TaskGraph, *, firings: int,
              extra_capacity: dict[str, int] | None = None,
              ii: dict[str, int] | None = None,
              max_cycles: int | None = None,
-             engine: str = "event") -> SimResult:
+             engine: str = "event",
+             profile: bool = False) -> SimResult:
     """Run until every non-detached task fired ``firings`` times.
 
     latency[s]        — pipeline registers on stream s (default 0)
@@ -303,11 +380,17 @@ def simulate(graph: TaskGraph, *, firings: int,
                         for the almost-full round-trip term)
     ii[t]             — initiation interval of task t (default 1)
     engine            — "event" (default, O(firings)) or "cycle" (reference)
+    profile           — attach per-stream ``StreamProfile`` occupancy/stall
+                        histograms to the result (event engine only; derived
+                        from the push/pop logs, so near-free)
     """
     max_cycles = max_cycles or firings * 64 + 10_000
     m = _Model(graph, latency, extra_capacity, ii)
     if engine == "event":
-        return _simulate_event(m, firings=firings, max_cycles=max_cycles)
+        return _simulate_event(m, firings=firings, max_cycles=max_cycles,
+                               profile=profile)
+    if profile:
+        raise ValueError("profile=True requires engine='event'")
     if engine in ("cycle", "legacy"):
         return _simulate_cycle(m, firings=firings, max_cycles=max_cycles)
     raise ValueError(f"unknown engine {engine!r}")

@@ -40,7 +40,6 @@ def build_loss(cfg: ArchConfig, *, remat: bool = True,
     def loss_fn(params, batch):
         tokens = batch["tokens"]
         x_tokens, targets = tokens[:, :-1], tokens[:, 1:]
-        logits = None
         # full forward without materializing logits: reuse group scan then
         # chunked CE
         specs = lm.build_specs(cfg)

@@ -22,7 +22,7 @@ import dataclasses
 
 from repro.configs.base import ArchConfig
 from repro.core import InfeasibleError, autobridge
-from .sharding import TpuPlan, plan_arch, tpu_slotgrid
+from .sharding import TpuPlan, tpu_slotgrid
 from .taskgraph import SHAPES, arch_taskgraph
 
 

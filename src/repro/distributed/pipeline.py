@@ -20,15 +20,11 @@ Mechanics
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.model import lm
@@ -162,7 +158,6 @@ def build_train_loss(cfg: ArchConfig, plan: TpuPlan, rmesh: Mesh, *,
             mb, seqp1 = tokens.shape[1], tokens.shape[2]
             seq = seqp1 - 1
             positions = jnp.arange(seq)
-            zero_x = jnp.zeros((mb, seq, cfg.d_model), PDTYPE)
 
             def stage_compute(x, x0):
                 def body(carry, g):
@@ -182,7 +177,6 @@ def build_train_loss(cfg: ArchConfig, plan: TpuPlan, rmesh: Mesh, *,
                 buf_x, buf_x0, loss_acc, aux_acc, count = carry
                 midx = jnp.clip(t, 0, n_micro - 1)
                 toks = tokens[midx][:, :-1]
-                tgts = tokens[midx][:, 1:]
                 x_in0 = lm._embed(params_local, cfg, toks)
                 x = jnp.where(stage == 0, x_in0, buf_x[0])
                 x0 = jnp.where(stage == 0, x_in0, buf_x0[0])

@@ -20,8 +20,7 @@ import dataclasses
 
 import numpy as np
 
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.core import Boundary, InfeasibleError, SlotGrid, autobridge

@@ -15,10 +15,14 @@ from __future__ import annotations
 
 from repro.core import Boundary, SlotGrid
 
-# vertical die boundaries: expensive; 2 register levels per crossing
-_DIE = lambda: Boundary(weight=1.0, pipeline_depth=2, delay_ns=2.4)
-# the middle IO/DDR column: cheaper but real
-_IOCOL = lambda: Boundary(weight=1.0, pipeline_depth=2, delay_ns=1.6)
+def _DIE() -> Boundary:
+    """Vertical die boundary: expensive; 2 register levels per crossing."""
+    return Boundary(weight=1.0, pipeline_depth=2, delay_ns=2.4)
+
+
+def _IOCOL() -> Boundary:
+    """The middle IO/DDR column: cheaper but real."""
+    return Boundary(weight=1.0, pipeline_depth=2, delay_ns=1.6)
 
 
 def u250_grid(max_util: float = 0.70, ddr_channels_per_row: int = 1) -> SlotGrid:

@@ -81,9 +81,10 @@ def _kernel(klen_ref, qoff_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(j == nk - 1)
     def _fin():
-        l = l_ref[...]
+        lsum = l_ref[...]
         o_ref[0, 0] = (acc_ref[...] /
-                       jnp.where(l > 0, l, 1.0)[:, None]).astype(o_ref.dtype)
+                       jnp.where(lsum > 0, lsum, 1.0)[:, None]
+                       ).astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,

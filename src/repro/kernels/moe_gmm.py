@@ -40,7 +40,6 @@ def _kernel(gid_ref, x_ref, w_ref, o_ref, *, tb, n_exp):
     def _body():
         x = x_ref[...].astype(jnp.float32)                  # (Tb, K)
         w = w_ref[0].astype(jnp.float32)                    # (K, N)
-        ids = jax.lax.broadcasted_iota(jnp.int32, (tb, 1), 0) + t * tb
         mask = jnp.zeros((tb, 1), jnp.float32)
         # gid lookup from SMEM (scalar stream)
         rows = jnp.stack([gid_ref[t * tb + i] for i in range(tb)])

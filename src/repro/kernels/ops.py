@@ -10,7 +10,6 @@ Default comes from ``repro.kernels.DEFAULT_IMPL`` (env ``REPRO_KERNEL_IMPL``).
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax

@@ -9,12 +9,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import configs
 from repro.configs.base import ArchConfig
 from repro.distributed import baseline as bl
 from repro.distributed import pipeline as pp
 from repro.distributed.sharding import TpuPlan, plan_cell, refined_mesh
-from repro.distributed.taskgraph import SHAPES, ShapeCell
+from repro.distributed.taskgraph import ShapeCell
 from repro.model import lm
 from repro.model.layers import PDTYPE
 from repro.optim import (adafactor_init, adafactor_update, adamw_init,

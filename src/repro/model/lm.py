@@ -16,7 +16,6 @@ encoder stack and cross-attention decoder.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from .layers import PDTYPE, _dense_init
+from .layers import _dense_init
 
 
 def moe_init(cfg: ArchConfig, key):

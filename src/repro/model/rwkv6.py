@@ -55,7 +55,8 @@ def time_mix_apply(p, cfg: ArchConfig, x, shift, state):
     D = cfg.ssm_head_dim
     H = d // D
     xs = _token_shift(x, shift)
-    mix = lambda i: x + (xs - x) * p["mu"][i][None, None]
+    def mix(i):
+        return x + (xs - x) * p["mu"][i][None, None]
     r = (mix(0) @ p["wr"]).reshape(B, S, H, D)
     k = (mix(1) @ p["wk"]).reshape(B, S, H, D)
     v = (mix(2) @ p["wv"]).reshape(B, S, H, D)
@@ -72,7 +73,8 @@ def time_mix_apply(p, cfg: ArchConfig, x, shift, state):
 
 def chan_mix_apply(p, cfg: ArchConfig, x, shift):
     xs = _token_shift(x, shift)
-    mix = lambda i: x + (xs - x) * p["mu"][i][None, None]
+    def mix(i):
+        return x + (xs - x) * p["mu"][i][None, None]
     k = jnp.square(jax.nn.relu(mix(0) @ p["wk"]))
     r = jax.nn.sigmoid(mix(1) @ p["wr"])
     return r * (k @ p["wv"]), x[:, -1:]

@@ -53,5 +53,5 @@ def zero1_specs(param_specs_tree, param_structs=None, *,
     flat_specs, tdef = jax.tree.flatten(
         param_specs_tree, is_leaf=lambda x: isinstance(x, P))
     flat_leaves = tdef.flatten_up_to(param_structs)
-    return tdef.unflatten([shard_one(s, l)
-                           for s, l in zip(flat_specs, flat_leaves)])
+    return tdef.unflatten([shard_one(s, leaf)
+                           for s, leaf in zip(flat_specs, flat_leaves)])

@@ -2,7 +2,6 @@
 worked example, and cycle detection."""
 import itertools
 
-import networkx as nx
 import numpy as np
 import pytest
 from _propcheck import given, settings, strategies as st
@@ -44,7 +43,7 @@ def test_paper_fig9_example():
     for via, e_in, e_out in [("v2", "e12", "e27"), ("v3", "e13", "e37"),
                              ("v4", "e14", "e47"), ("v5", "e15", "e57"),
                              ("v6", "e16", "e67")]:
-        lat = dict((n, l) for n, _, _, l, _ in edges)
+        lat = dict((n, el) for n, _, _, el, _ in edges)
         total = (lat[e_in] + res.balance[e_in]
                  + lat[e_out] + res.balance[e_out])
         assert total == 2
@@ -129,6 +128,6 @@ def test_property_matches_brute_force(n, m, seed):
         assert res.potentials[s] - res.potentials[d] >= lat
         assert res.balance[name] >= 0
     # optimality vs exhaustive search over small potential range
-    max_lat = sum(l for _, _, _, l, _ in edges)
+    max_lat = sum(el for _, _, _, el, _ in edges)
     ref = brute_force_balance(edges, s_max=max_lat)
     assert res.overhead == pytest.approx(ref)

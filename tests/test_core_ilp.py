@@ -4,7 +4,7 @@ import pytest
 from _propcheck import given, settings, strategies as st
 
 from repro.core.ilp import (BipartitionProblem, Edge, brute_force_bipartition,
-                            check_feasible, solve_bipartition, total_cost,
+                            check_feasible, solve_bipartition,
                             InfeasibleError)
 
 

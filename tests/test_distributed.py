@@ -4,7 +4,6 @@ TAPA planning, refined mesh construction, collective extraction.
 NOTE: runs in a subprocess with XLA_FLAGS so the main pytest process keeps
 its single-device view (per the dry-run spec: only the dry-run sees many
 devices)."""
-import json
 import os
 import subprocess
 import sys
@@ -13,7 +12,7 @@ import textwrap
 import pytest
 
 from repro import configs
-from repro.distributed.sharding import plan_cell, tpu_slotgrid
+from repro.distributed.sharding import plan_cell
 from repro.distributed.taskgraph import SHAPES, arch_taskgraph
 from repro.launch.hlo_analysis import collective_summary
 

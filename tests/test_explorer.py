@@ -1,0 +1,378 @@
+"""Joint design-space search tests (paper §6.3 generalized).
+
+Covers the Pareto pruner (dominated-point removal, tie handling),
+``SearchSpace`` enumeration/sampling, ``explore_floorplans`` backward
+compatibility on the candidate fields PR 1 introduced (``sim``,
+``base_sim``, ``throughput_preserved``), knob plumbing through
+``SlotGrid.with_knobs``, profile-driven FIFO sizing, the CI regression
+gate, and the headline acceptance: >= 100 joint configurations on the
+quickstart design scored with <= 5 ``simulate_batch`` calls.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    SearchSpace,
+    SlotGrid,
+    TaskGraphBuilder,
+    best_candidate,
+    explore_design_space,
+    explore_floorplans,
+    pareto_frontier,
+    pareto_indices,
+    simulate,
+)
+from repro.core import explorer as explorer_mod
+from repro.fpga import u280_grid
+
+
+# ---------------------------------------------------------------------------
+# Pareto pruner
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_removes_dominated():
+    vecs = [(1.0, 1.0), (2.0, 2.0), (0.5, 3.0), (1.5, 1.5)]
+    # (1,1) and (1.5,1.5) are dominated by (2,2); (0.5,3) survives on axis 2
+    assert pareto_indices(vecs) == [1, 2]
+
+
+def test_pareto_keeps_exact_ties():
+    vecs = [(1.0, 2.0), (1.0, 2.0), (0.0, 0.0)]
+    # identical vectors never dominate each other: both copies survive
+    assert pareto_indices(vecs) == [0, 1]
+
+
+def test_pareto_partial_tie_on_one_axis():
+    vecs = [(1.0, 5.0), (1.0, 4.0)]
+    # equal on axis 1, strictly worse on axis 2 -> dominated
+    assert pareto_indices(vecs) == [0]
+
+
+def test_pareto_single_and_empty():
+    assert pareto_indices([(3.0, 1.0)]) == [0]
+    assert pareto_indices([]) == []
+
+
+def test_pareto_three_axis_frontier_is_mutually_nondominated():
+    vecs = [(1, 9, 1), (2, 8, 2), (3, 7, 3), (1, 1, 1), (3, 7, 3)]
+    keep = pareto_indices(vecs)
+    assert 3 not in keep  # strictly dominated
+    kept = [vecs[i] for i in keep]
+    assert pareto_indices(kept) == list(range(len(kept)))
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace
+# ---------------------------------------------------------------------------
+
+
+def test_search_space_grid_enumeration():
+    space = SearchSpace(
+        seeds=(0, 1), utils=(0.6, 0.7), row_weights=(1.0, 2.0), depth_scales=(1.0,)
+    )
+    pts = space.grid_points()
+    assert space.size == len(pts) == 8
+    assert len(set(pts)) == 8
+    # single-seed wrapper ordering: utils vary slowest after seed
+    assert [p.max_util for p in pts[:4]] == [0.6, 0.6, 0.7, 0.7]
+
+
+def test_search_space_sampling_is_deterministic_subset():
+    space = SearchSpace(seeds=(0, 1, 2), utils=(0.6, 0.7, 0.8), depth_scales=(1, 2))
+    pts = space.sample(7, seed=42)
+    assert len(pts) == len(set(pts)) == 7
+    assert set(pts) <= set(space.grid_points())
+    assert pts == space.sample(7, seed=42)
+    # n >= size degrades to the full grid
+    assert space.sample(10_000) == space.grid_points()
+
+
+def test_with_knobs_scales_weights_and_depths():
+    grid = u280_grid()
+    scaled = grid.with_knobs(row_weight=3.0, depth_scale=2.0)
+    assert scaled.row_boundaries[0].weight == 3.0 * grid.row_boundaries[0].weight
+    assert (
+        scaled.row_boundaries[0].pipeline_depth
+        == 2 * grid.row_boundaries[0].pipeline_depth
+    )
+    # physical delay is a device property, never scaled
+    assert scaled.row_boundaries[0].delay_ns == grid.row_boundaries[0].delay_ns
+    # identity knobs return the grid unchanged (no copy churn)
+    assert grid.with_knobs() is grid
+
+
+# ---------------------------------------------------------------------------
+# explore_floorplans backward compatibility
+# ---------------------------------------------------------------------------
+
+
+def _chain_graph():
+    b = TaskGraphBuilder("chain")
+    for i in range(3):
+        b.stream(f"s{i}", width=64)
+    for i in range(4):
+        b.invoke(
+            f"K{i}",
+            area={"LUT": 100},
+            ins=[f"s{i - 1}"] if i > 0 else [],
+            outs=[f"s{i}"] if i < 3 else [],
+        )
+    return b.build()
+
+
+def _small_grid():
+    return SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 150}, max_util=1.0)
+
+
+def test_explore_floorplans_backcompat_fields():
+    cands = explore_floorplans(
+        _chain_graph(), _small_grid(), utils=(0.3, 0.8, 1.0), sim_firings=100
+    )
+    assert [c.max_util for c in cands] == [0.3, 0.8, 1.0]
+    infeasible = cands[0]
+    assert infeasible.plan is None and infeasible.error
+    assert infeasible.sim is None and infeasible.throughput_preserved is None
+    feasible = [c for c in cands if c.plan is not None]
+    assert feasible
+    for c in feasible:
+        assert c.sim is not None and not c.sim.deadlocked
+        assert c.throughput_preserved is True
+        # the shared baseline is simulated once for the whole sweep
+        assert c.base_sim is feasible[0].base_sim
+        assert c.point is not None and c.point.max_util == c.max_util
+    assert best_candidate(cands).plan is not None
+
+
+def test_explore_floorplans_without_sim():
+    cands = explore_floorplans(_chain_graph(), _small_grid(), utils=(0.8,))
+    (c,) = cands
+    assert c.sim is None and c.base_sim is None
+    assert c.throughput_preserved is None
+
+
+# ---------------------------------------------------------------------------
+# joint search acceptance (quickstart design)
+# ---------------------------------------------------------------------------
+
+
+def _vecadd():
+    pe = 4
+    b = TaskGraphBuilder("VecAdd")
+    a = b.streams("str_a", n=pe, width=512)
+    bb = b.streams("str_b", n=pe, width=512)
+    c = b.streams("str_c", n=pe, width=512)
+    b.invoke(
+        "LoadA",
+        area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+        outs=a,
+        count=pe,
+    )
+    b.invoke(
+        "LoadB",
+        area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+        outs=bb,
+        count=pe,
+    )
+    b.invoke("Add", area={"LUT": 60e3, "DSP": 256}, ins=a + bb, outs=c, count=pe)
+    b.invoke("Store", area={"LUT": 12e3, "hbm_channels": 1}, ins=c, count=pe)
+    return b.build()
+
+
+def test_explore_design_space_quickstart_acceptance(monkeypatch):
+    """>= 100 joint (seed x util x weight x depth) configurations on the
+    quickstart design, <= 5 simulate_batch calls, Pareto-only frontier,
+    and a best candidate no worse than the old single-axis sweep."""
+    graph = _vecadd()
+    grid = u280_grid()
+    calls = []
+    real_batch = explorer_mod.simulate_batch
+
+    def counting_batch(jobs, **kw):
+        calls.append(len(list(jobs)))
+        return real_batch(jobs, **kw)
+
+    monkeypatch.setattr(explorer_mod, "simulate_batch", counting_batch)
+    space = SearchSpace(
+        seeds=(0, 1, 2, 3),
+        row_weights=(1.0, 2.0),
+        depth_scales=(1.0, 2.0),
+    )
+    assert space.size >= 100
+    res = explore_design_space(
+        graph, grid, space=space, sim_firings=60, fifo_sizing=True
+    )
+    assert res.space_size == len(res.candidates) == space.size
+    assert len(calls) == res.sim_calls
+    assert res.sim_calls <= 5
+
+    # frontier: non-empty, subset of candidates, mutually non-dominated
+    assert res.frontier
+    assert pareto_frontier(res.frontier) == res.frontier
+    feasible = [c for c in res.candidates if c.plan is not None]
+    assert set(id(c) for c in res.frontier) <= set(id(c) for c in feasible)
+
+    best = res.best
+    assert best in res.frontier
+    assert best.throughput_preserved is True
+
+    # no worse than the old single-axis sweep (same default utils, seed 0)
+    old_best = best_candidate(explore_floorplans(graph, grid, sim_firings=60))
+    assert best.fmax >= old_best.fmax
+
+    # profile-driven FIFO sizing: trimming to observed peak occupancy must
+    # reproduce the exact simulated schedule, never grow capacity, and its
+    # savings metric must be non-negative
+    for c in res.frontier:
+        assert c.profile is not None and c.sized_capacity is not None
+        assert c.sized_sim.cycles == c.sim.cycles
+        assert not c.sized_sim.deadlocked
+        uniform = c.plan.sim_extra_capacity
+        assert all(e <= uniform[n] for n, e in c.sized_capacity.items())
+        assert c.fifo_savings_bits >= 0
+
+
+def test_demotion_mutation_is_confined_to_candidate_copies(monkeypatch):
+    """autobridge's cycle-breaking last resort demotes a stream by mutating
+    the input graph; the joint sweep must not leak that into later points,
+    the shared baseline, or the caller's graph."""
+    graph = _chain_graph()
+    grid = _small_grid()
+    real_autobridge = explorer_mod.autobridge
+    mutated_calls = []
+
+    def demoting_autobridge(g, *a, **kw):
+        plan = real_autobridge(g, *a, **kw)
+        g.streams[0].control = True  # simulate the demotion fallback
+        mutated_calls.append(kw.get("seed"))
+        return plan
+
+    monkeypatch.setattr(explorer_mod, "autobridge", demoting_autobridge)
+    res = explore_design_space(
+        graph, grid, space=SearchSpace(seeds=(0,), utils=(0.8, 1.0)), sim_firings=50
+    )
+    # caller's graph untouched
+    assert not graph.streams[0].control
+    # each candidate's plan lives on its own private copy with the demotion
+    for c in res.candidates:
+        assert c.plan is not None
+        assert c.plan.graph is not graph
+        assert c.plan.graph.streams[0].control
+    # infeasible + mutating run also restores the caller's flags
+    def failing_autobridge(g, *a, **kw):
+        g.streams[0].control = True
+        raise explorer_mod.InfeasibleError("boom")
+
+    monkeypatch.setattr(explorer_mod, "autobridge", failing_autobridge)
+    res = explore_design_space(graph, grid, space=SearchSpace(seeds=(0,), utils=(0.8,)))
+    assert not graph.streams[0].control
+    assert res.candidates[0].error
+
+
+def test_depth_scale_variants_share_floorplan_but_differ_in_depth():
+    graph = _vecadd()
+    grid = u280_grid()
+    space = SearchSpace(seeds=(0,), utils=(0.7,), depth_scales=(1.0, 2.0))
+    res = explore_design_space(graph, grid, space=space)
+    c1, c2 = res.candidates
+    assert c1.plan.floorplan.placement == c2.plan.floorplan.placement
+    crossing = [n for n, d in c1.plan.pipelining.lat.items() if d > 0]
+    assert crossing, "expected at least one cross-slot stream"
+    for n in crossing:
+        assert c2.plan.pipelining.lat[n] == 2 * c1.plan.pipelining.lat[n]
+
+
+# ---------------------------------------------------------------------------
+# event-engine occupancy profiles
+# ---------------------------------------------------------------------------
+
+
+def test_stream_profile_histogram_and_backpressure():
+    b = TaskGraphBuilder("pc")
+    b.stream("s", width=32, depth=2)
+    b.invoke("P", area={}, outs=["s"])
+    b.invoke("C", area={}, ins=["s"])
+    g = b.build()
+    # consumer at II=3 -> the FIFO saturates and the producer stalls
+    res = simulate(g, firings=10, ii={"C": 3}, profile=True)
+    p = res.profiles["s"]
+    assert p.capacity == 2
+    assert p.peak == 2
+    assert p.full_cycles > 0
+    assert sum(p.hist.values()) == res.cycles
+    assert p.mean == pytest.approx(
+        sum(k * v for k, v in p.hist.items()) / res.cycles
+    )
+
+
+def test_profile_requires_event_engine():
+    g = _chain_graph()
+    with pytest.raises(ValueError):
+        simulate(g, firings=5, engine="cycle", profile=True)
+
+
+# ---------------------------------------------------------------------------
+# CI regression gate
+# ---------------------------------------------------------------------------
+
+
+def _load_check_regression():
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "benchmarks",
+        "check_regression.py",
+    )
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _fmax_doc(opt_avg, deadlocks=0):
+    return {
+        "suite": "fmax_suite",
+        "rows": [{"name": "d", "board": "u280", "opt_mhz": opt_avg}],
+        "summary": {
+            "opt_avg_mhz": opt_avg,
+            "sim_deadlocks": deadlocks,
+            "throughput_violations": 0,
+        },
+    }
+
+
+def test_check_regression_gate(tmp_path):
+    cr = _load_check_regression()
+
+    def write(name, doc):
+        p = tmp_path / name
+        p.write_text(json.dumps(doc))
+        return str(p)
+
+    base = write("base.json", _fmax_doc(300.0))
+    ok = write("ok.json", _fmax_doc(298.0))
+    bad = write("bad.json", _fmax_doc(250.0))
+    dead = write("dead.json", _fmax_doc(300.0, deadlocks=1))
+    assert cr.main([ok, base, "--tol", "0.02"]) == 0
+    assert cr.main([bad, base, "--tol", "0.02"]) == 1
+    assert cr.main([dead, base]) == 1
+
+    tp_base = write(
+        "tp_base.json",
+        {"suite": "throughput", "rows": [{"name": "d", "cycles_tapa": 100}]},
+    )
+    tp_ok = write(
+        "tp_ok.json",
+        {"suite": "throughput", "rows": [{"name": "d", "cycles_tapa": 101}]},
+    )
+    tp_bad = write(
+        "tp_bad.json",
+        {"suite": "throughput", "rows": [{"name": "d", "cycles_tapa": 150}]},
+    )
+    assert cr.main([tp_ok, tp_base]) == 0
+    assert cr.main([tp_bad, tp_base]) == 1
+    # suite mismatch is a hard configuration error
+    assert cr.main([tp_ok, base]) == 2
