@@ -6,10 +6,13 @@ Compares a freshly produced BENCH_*.json (from ``fmax_suite.py --json`` or
 regress beyond tolerance:
 
 * fmax suite: average optimized fmax must not drop more than ``--tol``
-  relative to baseline; no simulated deadlocks; no throughput violations.
+  relative to baseline; no simulated deadlocks; no throughput violations;
+  and (for subset runs, i.e. the CI fast gate) the simulation phase must
+  have stayed vectorized — any per-job event-engine fallback fails.
 * throughput suite: per-design TAPA cycle counts must not grow more than
   ``--tol`` relative to baseline; every baseline design must still be
-  present.
+  present; the vectorization gate always applies (the throughput suite is
+  itself the CI fast suite).
 
 Usage:
     python benchmarks/check_regression.py CURRENT.json BASELINE.json [--tol 0.02]
@@ -27,6 +30,35 @@ def _load(path: str) -> dict:
         return json.load(f)
 
 
+def check_sim(cur: dict, *, label: str) -> list[str]:
+    """The CI vectorization gate, shared by both suites: the whole suite's
+    simulation phase (top-level ``sim`` metadata from
+    ``timed_pool_simulations``) must stay batched on the padded array
+    backend — a per-job event-engine fallback or a split into several
+    array-sweeps means the perf win silently evaporated."""
+    sim = cur.get("sim")
+    if sim is None:
+        return []
+    errors = []
+    counts = sim.get("counts", {})
+    for eng in ("event", "cycle"):
+        runs = counts.get(eng, 0)
+        if runs:
+            errors.append(
+                f"{label} fell back to per-job {eng} simulation "
+                f"({runs} {eng}-engine run(s); expected 0)"
+            )
+    numpy_runs = counts.get("numpy", 0)
+    if numpy_runs != 1:
+        # 0 means the simulation phase silently never ran; >1 means the
+        # suite degraded into several array-sweeps
+        errors.append(
+            f"{label} ran {numpy_runs} array-sweeps (expected exactly one "
+            f"per suite)"
+        )
+    return errors
+
+
 def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
     errors = []
     cs, bs = cur["summary"], base["summary"]
@@ -42,6 +74,8 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
         errors.append(
             f"{cs['throughput_violations']} design(s) lost steady-state throughput"
         )
+    if cur.get("subset"):
+        errors += check_sim(cur, label="fast subset")
     cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
     for r in base["rows"]:
         key = (r["name"], r["board"])
@@ -54,7 +88,8 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
 
 
 def check_throughput(cur: dict, base: dict, tol: float) -> list[str]:
-    errors = []
+    # the throughput suite IS the CI fast suite: always gate vectorization
+    errors = check_sim(cur, label="throughput suite")
     cur_rows = {r["name"]: r for r in cur["rows"]}
     for r in base["rows"]:
         name = r["name"]

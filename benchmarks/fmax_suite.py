@@ -2,12 +2,19 @@
 
 For every design: baseline = packed placement, no pipelining (the default
 tool flow); TAPA = the §6.3 joint design-space search over the max-util
-sweep (``explore_design_space`` — all knob points evaluated, Pareto-pruned,
-best frontier candidate kept), replacing the old first-feasible retry loop.
-Frequencies come from the calibrated physical-design surrogate; throughput
-(cycle) preservation is checked by dataflow simulation on *every* run —
-each design's baseline + all candidates share one vectorized
-``simulate_batch`` call.
+sweep (all knob points evaluated, Pareto-pruned, best frontier candidate
+kept), replacing the old first-feasible retry loop.  Frequencies come from
+the calibrated physical-design surrogate; throughput (cycle) preservation
+is checked by dataflow simulation on *every* run.
+
+Cross-design batching: the search phase defers simulation
+(``prepare_design_space``), and then ONE ``simulate_batch`` call scores
+every design's baseline + all candidates for the whole suite — the padded
+ragged-batch backend vectorizes across the heterogeneous topologies, so
+the suite's simulation phase is a single array-sweep instead of one
+Python-level engine run per design.  The JSON summary records the engine
+invocation counters, backends used and simulation wall-time so CI can
+verify the fast subset never degrades to per-job event simulation.
 
 Paper targets: baseline avg 147 MHz (failures counted as 0), optimized avg
 297 MHz; 16/43 baseline failures, all recovered (avg 274 MHz).
@@ -23,8 +30,9 @@ import json
 import time
 
 from repro.core import (InfeasibleError, SearchSpace, analyze_timing,
-                        explore_design_space, packed_placement)
-from repro.fpga import benchmarks as B, u250_grid, u280_grid
+                        packed_placement, prepare_design_space,
+                        timed_pool_simulations)
+from repro.fpga import benchmarks as B, grid_for
 
 UTIL_SWEEP = (0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.0)
 
@@ -38,59 +46,67 @@ FAST_SUBSET = ("stencil_x2", "stencil_x4", "cnn_13x2", "gaussian_12",
 DEFAULT_FIRINGS = 200
 
 
-def grid_for(board: str):
-    return u250_grid() if board == "u250" else u280_grid()
-
-
-def run_tapa(graph, grid, seed: int = 0, *, sim_firings: int | None = None):
-    """§6.3 knob search as a joint batched sweep: every util point is
-    evaluated ("implement all candidates in parallel"), throughput-scored in
-    one ``simulate_batch`` call, and the best Pareto-frontier candidate is
-    returned along with the full ``SearchResult``.
-
-    Raises ``InfeasibleError`` when no point yields a routable plan."""
-    space = SearchSpace(seeds=(seed,), utils=UTIL_SWEEP)
-    res = explore_design_space(graph, grid, space=space,
-                               sim_firings=sim_firings)
-    return res.best, res
-
-
-def evaluate(name: str, board: str, graph,
-             sim_firings: int | None = DEFAULT_FIRINGS):
+def prepare(name: str, board: str, graph) -> dict:
+    """Baseline timing + deferred candidate search for one design (no
+    simulation yet — that happens once for the whole suite)."""
     grid = grid_for(board)
     base_pl = packed_placement(graph, grid)
     base = analyze_timing(graph, grid, base_pl)
     t0 = time.monotonic()
+    prep = prepare_design_space(graph, grid,
+                                space=SearchSpace(seeds=(0,),
+                                                  utils=UTIL_SWEEP))
+    wall = time.monotonic() - t0
+    return {"name": name, "board": board, "graph": graph, "grid": grid,
+            "base_pl": base_pl, "base": base, "prep": prep, "wall_s": wall}
+
+
+def score_all(entries: list[dict], sim_firings: int | None) -> dict | None:
+    """The suite's entire simulation phase: one ``simulate_batch`` call
+    over every design's baseline + feasible candidates (mixed topologies
+    vectorize through the padded backend).  Returns the recorded metadata
+    (engine counters, backends, wall time) or None when sim is disabled."""
+    if not sim_firings:
+        return None
+    _, meta = timed_pool_simulations([e["prep"] for e in entries],
+                                     firings=sim_firings)
+    return meta
+
+
+def finish(entry: dict, sim_firings: int | None) -> dict:
+    """Frontier + row assembly for one prepared (and batch-scored) design."""
+    graph, base = entry["graph"], entry["base"]
+    res = entry["prep"].finish(sim_calls=1 if sim_firings else 0)
     cand = None
     try:
-        cand, search = run_tapa(graph, grid, sim_firings=sim_firings)
-        plan, util, opt = cand.plan, cand.point.max_util, cand.report
-        wall = time.monotonic() - t0
-        overhead = plan.area_overhead
-        frontier = len(search.frontier)
+        cand = res.best
+        util, opt = cand.point.max_util, cand.report
+        overhead = cand.plan.area_overhead
+        frontier = len(res.frontier)
     except InfeasibleError as e:
-        util, wall, overhead, frontier = None, time.monotonic() - t0, 0.0, 0
-        opt = analyze_timing(graph, grid, base_pl)  # placeholder, marked fail
+        util, overhead, frontier = None, 0.0, 0
+        opt = analyze_timing(graph, entry["grid"], entry["base_pl"])
         opt.routed, opt.fmax_mhz, opt.fail_reason = False, 0.0, str(e)
     row = {
-        "name": name, "board": board,
+        "name": entry["name"], "board": entry["board"],
         "tasks": graph.num_tasks, "streams": graph.num_streams,
         "base_mhz": base.fmax_mhz if base.routed else 0.0,
         "base_fail": None if base.routed else base.fail_reason,
         "opt_mhz": opt.fmax_mhz if opt.routed else 0.0,
         "opt_fail": None if opt.routed else opt.fail_reason,
-        "util": util, "wall_s": wall,
+        "util": util, "wall_s": entry["wall_s"],
         "buffer_overhead_bits": overhead,
         "frontier": frontier,
     }
     if sim_firings and cand is not None and cand.sim is not None:
         # throughput preservation by dataflow simulation (paper Tables 4-7):
-        # scored for every candidate inside the search's batched call.
+        # scored for every candidate inside the suite-wide batched call.
         row["cycles_base"] = cand.base_sim.cycles
         row["cycles_opt"] = cand.sim.cycles
         row["cycles_delta"] = cand.sim.cycles - cand.base_sim.cycles
         row["sim_deadlock"] = cand.sim.deadlocked
         row["throughput_preserved"] = cand.throughput_preserved
+        row["backend_used"] = cand.sim.engine
     return row
 
 
@@ -119,11 +135,13 @@ def summarize(rows: list[dict]) -> dict:
 def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
          subset: tuple[str, ...] | None = None,
          json_path: str | None = None) -> list[dict]:
+    entries = [prepare(name, board, graph)
+               for name, board, graph in B.autobridge_suite()
+               if subset is None or name in subset]
+    sim_meta = score_all(entries, sim_firings)
     rows = []
-    for name, board, graph in B.autobridge_suite():
-        if subset is not None and name not in subset:
-            continue
-        r = evaluate(name, board, graph, sim_firings=sim_firings)
+    for entry in entries:
+        r = finish(entry, sim_firings)
         rows.append(r)
         if verbose:
             base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
@@ -141,11 +159,17 @@ def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
           f"recovered_avg={s['recovered_avg_mhz']:.0f}MHz (paper 274) "
           f"routable_base_avg={s['routable_base_avg_mhz']:.0f}MHz (paper 234) "
           f"deadlocks={s['sim_deadlocks']}")
+    if sim_meta:
+        print(f"fmax_suite,SIM,0,jobs={sim_meta['jobs']} "
+              f"invocations={sim_meta['invocations']} "
+              f"backends={'+'.join(sim_meta['backends'])} "
+              f"wall={sim_meta['wall_s']:.3f}s")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "fmax_suite", "sim_firings": sim_firings,
                        "subset": sorted(subset) if subset else None,
-                       "rows": rows, "summary": s}, f, indent=2)
+                       "rows": rows, "summary": s, "sim": sim_meta},
+                      f, indent=2)
         print(f"fmax_suite,JSON,0,wrote {json_path}")
     return rows
 

@@ -6,24 +6,30 @@ from .balance import BalanceResult, CycleError, balance_graph, balance_latencies
 from .devicegrid import Boundary, SlotGrid
 from .floorplan import Floorplan, floorplan
 from .graph import Stream, Task, TaskGraph, TaskGraphBuilder
-from .explorer import (Candidate, SearchPoint, SearchResult, SearchSpace,
-                       best_candidate, explore_design_space,
-                       explore_floorplans, pareto_frontier, pareto_indices)
+from .explorer import (BackendSweep, Candidate, DeferredSearch, SearchPoint,
+                       SearchResult, SearchSpace, best_candidate,
+                       explore_design_space, explore_floorplans,
+                       pareto_frontier, pareto_indices, pool_simulations,
+                       prepare_design_space, sweep_backends,
+                       timed_pool_simulations)
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing, packed_placement
 from .ilp import InfeasibleError
 from .pipelining import PipelineAssignment, assign_pipelining
-from .simulate import (SimJob, SimResult, StreamProfile, pipeline_headroom,
-                       simulate, simulate_batch)
+from .simulate import (SimJob, SimResult, StreamProfile, engine_counts,
+                       pipeline_headroom, reset_engine_counts, simulate,
+                       simulate_batch)
 
 __all__ = [
     "Plan", "autobridge", "BalanceResult", "CycleError", "balance_graph",
     "balance_latencies", "Boundary", "SlotGrid", "Floorplan", "floorplan",
     "Stream", "Task", "TaskGraph", "TaskGraphBuilder", "InfeasibleError",
     "PipelineAssignment", "assign_pipelining",
-    "Candidate", "best_candidate", "explore_floorplans",
+    "BackendSweep", "Candidate", "DeferredSearch", "best_candidate",
+    "explore_floorplans", "pool_simulations", "prepare_design_space",
+    "sweep_backends", "timed_pool_simulations",
     "SearchPoint", "SearchResult", "SearchSpace", "explore_design_space",
     "pareto_frontier", "pareto_indices",
     "PhysicalModel", "TimingReport", "analyze_timing", "packed_placement",
-    "SimJob", "SimResult", "StreamProfile", "pipeline_headroom", "simulate",
-    "simulate_batch",
+    "SimJob", "SimResult", "StreamProfile", "engine_counts",
+    "pipeline_headroom", "reset_engine_counts", "simulate", "simulate_batch",
 ]

@@ -28,9 +28,20 @@ the event engine (per-stream occupancy histograms from the push/pop logs)
 and their FIFO headroom re-sized to the *observed* peak occupancy instead
 of the uniform ``2*latency`` round-trip term — trimming to the observed
 peak provably preserves the simulated schedule, so the verification batch
-must reproduce the same cycle count.
+must reproduce the same cycle count.  The reclaimed bits are then credited
+back into the fmax surrogate: ``sized_report`` scores the design with its
+real (smaller) buffering footprint charged into slot utilization.
 
-``explore_floorplans`` remains as a thin single-axis compatibility wrapper.
+Deferred scoring and multi-device sweeps: ``prepare_design_space`` returns
+a ``DeferredSearch`` whose simulation jobs a caller can pool across many
+searches; ``sweep_backends`` uses this to compare one design across several
+device grids (U250/U280/TPU-pod shapes) with ALL grids' candidates scored
+in a single ``simulate_batch`` call — the padded ragged-batch backend
+vectorizes across the grids' heterogeneous candidate sets.
+
+``explore_floorplans`` remains as a thin single-axis compatibility wrapper,
+and ``SearchSpace.refine`` zooms random sampling into the numeric
+neighborhood of a Pareto frontier for adaptive refinement.
 """
 from __future__ import annotations
 
@@ -38,7 +49,8 @@ import copy
 import dataclasses
 import itertools
 import random
-from typing import Callable, Sequence
+import time
+from typing import Callable, Mapping, Sequence
 
 from .autobridge import Plan, autobridge
 from .balance import CycleError, balance_graph
@@ -47,8 +59,8 @@ from .fmax_model import PhysicalModel, TimingReport, analyze_timing
 from .graph import TaskGraph
 from .ilp import InfeasibleError
 from .pipelining import assign_pipelining
-from .simulate import (SimJob, SimResult, StreamProfile, simulate,
-                       simulate_batch)
+from .simulate import (SimJob, SimResult, StreamProfile, engine_counts,
+                       reset_engine_counts, simulate, simulate_batch)
 
 #: the paper's §6.3 max-util sweep (Table 10)
 DEFAULT_UTILS = (0.55, 0.60, 0.65, 0.70, 0.75, 0.80, 0.85)
@@ -114,6 +126,45 @@ class SearchSpace:
         rng = random.Random(seed)
         return [self._decode(i) for i in rng.sample(range(self.size), n)]
 
+    def refine(self, frontier: Sequence, n: int, *,
+               seed: int = 0) -> list[SearchPoint]:
+        """Adaptive refinement: ``n`` points sampled from the *neighborhood*
+        of the frontier's knob values (ROADMAP "zoom into the frontier").
+
+        ``frontier`` is a sequence of ``Candidate``s (or bare
+        ``SearchPoint``s).  Each numeric axis of the refined space keeps
+        the frontier's values plus the midpoints toward the adjacent
+        values of this space's axis — halving the grid pitch around every
+        winner; seeds are restricted to those the frontier used.  Sampling
+        reuses the ``sample`` plumbing (distinct, uniform, deterministic),
+        so ``refine`` composes with repeated zooming:
+        ``space.refine(res.frontier, 32)`` then search those points via
+        ``SearchSpace`` of the returned values, and so on."""
+        pts = [getattr(c, "point", c) for c in frontier]
+        pts = [p for p in pts if p is not None]
+        if not pts:
+            return self.sample(n, seed=seed)
+
+        def hood(axis: tuple, values: set) -> tuple:
+            out = set(values)
+            sv = sorted(set(axis) | set(values))
+            for v in values:
+                i = sv.index(v)
+                if i > 0:
+                    out.add((v + sv[i - 1]) / 2)
+                if i + 1 < len(sv):
+                    out.add((v + sv[i + 1]) / 2)
+            return tuple(sorted(out))
+
+        refined = SearchSpace(
+            seeds=tuple(sorted({p.seed for p in pts})),
+            utils=hood(self.utils, {p.max_util for p in pts}),
+            row_weights=hood(self.row_weights, {p.row_weight for p in pts}),
+            col_weights=hood(self.col_weights, {p.col_weight for p in pts}),
+            depth_scales=hood(self.depth_scales,
+                              {p.depth_scale for p in pts}))
+        return refined.sample(n, seed=seed)
+
 
 @dataclasses.dataclass
 class Candidate:
@@ -137,6 +188,13 @@ class Candidate:
     #: uniform-headroom reference at the same firing count, or None if the
     #: sizing was reverted
     sized_sim: SimResult | None = None
+    #: timing of the sized design with its (smaller) buffering footprint
+    #: charged into slot utilization (``analyze_timing(buffer_bits=...)``) —
+    #: reclaimed BRAM/LUT credited back, so never below ``uniform_report``
+    sized_report: TimingReport | None = None
+    #: the uniform-headroom twin scored under the same buffering charge
+    #: (the comparison anchor for the FIFO-sizing credit)
+    uniform_report: TimingReport | None = None
 
     @property
     def fmax(self) -> float:
@@ -254,31 +312,118 @@ def _derive_depth_variant(graph: TaskGraph, grid: SlotGrid, base: Plan,
                 demoted_streams=list(base.demoted_streams))
 
 
-def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
+@dataclasses.dataclass
+class DeferredSearch:
+    """Candidate enumeration with throughput scoring deferred.
+
+    ``prepare_design_space`` runs the floorplan -> pipeline -> balance
+    co-optimization and the physical model for every point but leaves the
+    simulator out, so a caller can pool the simulation jobs of *many*
+    searches — different designs, different device grids — into one
+    ``simulate_batch`` call (mixed topologies vectorize through the padded
+    backend).  ``sim_jobs`` exposes this search's slice of jobs,
+    ``attach_sim`` distributes that call's results back onto the
+    candidates, and ``finish`` computes the Pareto frontier."""
+    graph: TaskGraph
+    grid: SlotGrid
+    model: PhysicalModel
+    candidates: list[Candidate]
+    space_size: int
+
+    @property
+    def feasible(self) -> list[Candidate]:
+        return [c for c in self.candidates if c.plan is not None]
+
+    def sim_jobs(self) -> list[SimJob]:
+        """The shared unpipelined baseline followed by one job per feasible
+        candidate (empty when there is nothing to simulate)."""
+        feas = self.feasible
+        if not feas:
+            return []
+        return [SimJob(self.graph)] + [c.plan.sim_job() for c in feas]
+
+    def attach_sim(self, results: Sequence[SimResult]) -> None:
+        """Distribute ``simulate_batch`` results produced from
+        ``sim_jobs()`` (same order: baseline first)."""
+        feas = self.feasible
+        if not feas:
+            return
+        base_res = results[0]
+        for c, res in zip(feas, results[1:]):
+            c.sim = res
+            c.base_sim = base_res
+
+    def finish(self, *, sim_calls: int = 0) -> SearchResult:
+        return SearchResult(candidates=self.candidates,
+                            frontier=pareto_frontier(self.candidates),
+                            sim_calls=sim_calls,
+                            space_size=self.space_size)
+
+
+def pool_simulations(preps: Sequence[DeferredSearch], *,
+                     firings: int) -> list[SimResult]:
+    """Score many deferred searches' jobs in ONE ``simulate_batch`` call.
+
+    Concatenates every search's ``sim_jobs()``, runs the single batched
+    call (mixed topologies vectorize through the padded backend), and
+    distributes each search's slice back via ``attach_sim``.  Returns the
+    flat result list ([] when there was nothing to score) so callers can
+    record metadata such as the engines used."""
+    jobs: list[SimJob] = []
+    spans: list[tuple[int, int]] = []
+    for prep in preps:
+        pj = prep.sim_jobs()
+        spans.append((len(jobs), len(jobs) + len(pj)))
+        jobs.extend(pj)
+    if not jobs:
+        return []
+    results = simulate_batch(jobs, firings=firings)
+    for prep, (lo, hi) in zip(preps, spans):
+        prep.attach_sim(results[lo:hi])
+    return results
+
+
+def timed_pool_simulations(preps: Sequence[DeferredSearch], *,
+                           firings: int) -> tuple[list[SimResult], dict]:
+    """``pool_simulations`` plus the benchmark drivers' metadata recording:
+    resets the global engine counters, times the batched call, and returns
+    ``(results, meta)`` where ``meta`` is the JSON-ready dict every
+    ``BENCH_*.json`` writer stores under its top-level ``"sim"`` key —
+    ``{firings, jobs, invocations, counts, backends, wall_s}`` — and the
+    CI regression gate inspects to prove the suite stayed vectorized."""
+    reset_engine_counts()
+    t0 = time.monotonic()
+    results = pool_simulations(preps, firings=firings)
+    wall = time.monotonic() - t0
+    counts = engine_counts()
+    meta = {"firings": firings, "jobs": len(results),
+            "invocations": sum(counts.values()), "counts": counts,
+            "backends": sorted({r.engine for r in results}),
+            "wall_s": wall}
+    return results, meta
+
+
+def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
                          space: SearchSpace | None = None,
                          mode: str = "grid",
                          n_samples: int = 64,
                          sample_seed: int = 0,
+                         points: Sequence[SearchPoint] | None = None,
                          model: PhysicalModel = PhysicalModel(),
                          score: Callable[[Plan], TimingReport] | None = None,
-                         sim_firings: int | None = None,
-                         fifo_sizing: bool = False,
-                         fifo_firings: int | None = None,
-                         **ab_kwargs) -> SearchResult:
-    """Joint batched design-space search (see module docstring).
+                         **ab_kwargs) -> DeferredSearch:
+    """Enumerate and physically score every search point, deferring the
+    batched throughput simulation to the caller (see ``DeferredSearch``).
 
-    mode         — "grid" sweeps the full cartesian product of ``space``;
-                   "random" draws ``n_samples`` distinct points from it
-    sim_firings  — when set, score *all* feasible candidates' throughput in
-                   one vectorized ``simulate_batch`` call (plus the shared
-                   unpipelined baseline)
-    fifo_sizing  — profile frontier candidates with the event engine and
-                   re-size their FIFO headroom to observed peak occupancy;
-                   one more batch call verifies cycles are unchanged
-    ab_kwargs    — forwarded to ``autobridge`` (e.g. ``same_slot``)
+    mode    — "grid" sweeps the full cartesian product of ``space``;
+              "random" draws ``n_samples`` distinct points from it
+    points  — explicit point list (e.g. from ``SearchSpace.refine``);
+              overrides ``mode``
     """
     space = space or SearchSpace()
-    if mode == "grid":
+    if points is not None:
+        points = list(points)
+    elif mode == "grid":
         points = space.grid_points()
     elif mode == "random":
         points = space.sample(n_samples, seed=sample_seed)
@@ -317,8 +462,8 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
             if _restore_ctrl() and not isinstance(made, InfeasibleError):
                 # this point needs the demotion: re-run on a private copy so
                 # the candidate keeps a consistent graph while the shared
-                # one stays pristine (simulate_batch detects the topology
-                # split and falls back to per-job event simulation for it)
+                # one stays pristine (simulate_batch groups the split
+                # topology separately inside the same padded array-sweep)
                 try:
                     made = _run_autobridge(copy.deepcopy(graph), pt)
                 except InfeasibleError as err:
@@ -349,54 +494,211 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
         cands.append(Candidate(max_util=pt.max_util, plan=plan, report=rep,
                                point=pt))
 
+    return DeferredSearch(graph=graph, grid=grid, model=model,
+                          candidates=cands, space_size=len(points))
+
+
+def _buffer_bits(plan: Plan, extra_capacity: dict[str, int]) -> dict[str, float]:
+    """Per-stream inserted buffering in bits: declared FIFO storage plus
+    pipeline registers plus the given headroom, width-weighted — the
+    quantity ``analyze_timing(buffer_bits=...)`` charges into slots."""
+    return {s.name: (int(s.depth) + plan.depth.get(s.name, 0)
+                     + extra_capacity.get(s.name, 0)) * s.width
+            for s in plan.graph.streams}
+
+
+def _size_fifos(res: SearchResult, grid: SlotGrid, model: PhysicalModel,
+                firings: int) -> None:
+    """Profile-driven FIFO sizing of the frontier (one more batch call),
+    plus the area-model feedback: both the sized design and its
+    uniform-headroom twin are re-scored with their buffering footprint
+    charged into slot utilization, so reclaimed bits show up as fmax."""
+    frontier = res.frontier
+    jobs = []
+    for c in frontier:
+        g = c.plan.graph
+        prof = simulate(g, firings=firings, latency=c.plan.depth,
+                        extra_capacity=c.plan.sim_extra_capacity,
+                        profile=True)
+        c.profile = prof.profiles
+        # observed-peak trimming: occupancy never exceeded peak, so
+        # capacity=peak admits the exact same firing schedule.  Streams the
+        # profiler does not model (control streams) keep their uniform
+        # headroom — they were never observed, so nothing was reclaimed and
+        # no area credit may be taken for them.
+        declared = {s.name: int(s.depth) for s in g.streams}
+        c.sized_capacity = dict(c.plan.sim_extra_capacity)
+        c.sized_capacity.update({name: max(0, p.peak - declared[name])
+                                 for name, p in prof.profiles.items()})
+        # sized variant paired with its uniform-headroom reference at
+        # the *same* firing count, so the verdict below is well-defined
+        # even when fifo_firings != sim_firings
+        jobs.append(SimJob(g, latency=dict(c.plan.depth),
+                           extra_capacity=dict(c.sized_capacity)))
+        jobs.append(c.plan.sim_job())
+    results = simulate_batch(jobs, firings=firings)
+    res.sim_calls += 1
+    for i, c in enumerate(frontier):
+        sized, uniform = results[2 * i], results[2 * i + 1]
+        if sized.deadlocked or sized.cycles != uniform.cycles:
+            # trimming broke the schedule (theoretically unreachable):
+            # revert rather than hand out an unverified sizing
+            c.sized_capacity = None
+            c.sized_sim = None
+            continue
+        c.sized_sim = sized
+        placement = c.plan.floorplan.placement
+        c.uniform_report = analyze_timing(
+            c.plan.graph, grid, placement, c.plan.depth, model,
+            buffer_bits=_buffer_bits(c.plan, c.plan.sim_extra_capacity))
+        c.sized_report = analyze_timing(
+            c.plan.graph, grid, placement, c.plan.depth, model,
+            buffer_bits=_buffer_bits(c.plan, c.sized_capacity))
+
+
+def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
+                         space: SearchSpace | None = None,
+                         mode: str = "grid",
+                         n_samples: int = 64,
+                         sample_seed: int = 0,
+                         points: Sequence[SearchPoint] | None = None,
+                         model: PhysicalModel = PhysicalModel(),
+                         score: Callable[[Plan], TimingReport] | None = None,
+                         sim_firings: int | None = None,
+                         fifo_sizing: bool = False,
+                         fifo_firings: int | None = None,
+                         **ab_kwargs) -> SearchResult:
+    """Joint batched design-space search (see module docstring).
+
+    mode         — "grid" sweeps the full cartesian product of ``space``;
+                   "random" draws ``n_samples`` distinct points from it
+    points       — explicit point list (``SearchSpace.refine`` output);
+                   overrides ``mode``
+    sim_firings  — when set, score *all* feasible candidates' throughput in
+                   one vectorized ``simulate_batch`` call (plus the shared
+                   unpipelined baseline)
+    fifo_sizing  — profile frontier candidates with the event engine and
+                   re-size their FIFO headroom to observed peak occupancy;
+                   one more batch call verifies cycles are unchanged, and
+                   the reclaimed bits are credited back into slot
+                   utilization (``sized_report`` vs ``uniform_report``)
+    ab_kwargs    — forwarded to ``autobridge`` (e.g. ``same_slot``)
+    """
+    prep = prepare_design_space(graph, grid, space=space, mode=mode,
+                                n_samples=n_samples, sample_seed=sample_seed,
+                                points=points, model=model, score=score,
+                                **ab_kwargs)
     sim_calls = 0
     if sim_firings:
-        feasible = [c for c in cands if c.plan is not None]
-        if feasible:
-            jobs = [SimJob(graph)] + [c.plan.sim_job() for c in feasible]
-            results = simulate_batch(jobs, firings=sim_firings)
+        jobs = prep.sim_jobs()
+        if jobs:
+            prep.attach_sim(simulate_batch(jobs, firings=sim_firings))
             sim_calls += 1
-            base_res = results[0]
-            for c, res in zip(feasible, results[1:]):
-                c.sim = res
-                c.base_sim = base_res
+    res = prep.finish(sim_calls=sim_calls)
+    if fifo_sizing and res.frontier:
+        _size_fifos(res, grid, model, fifo_firings or sim_firings or 200)
+    return res
 
-    frontier = pareto_frontier(cands)
 
-    if fifo_sizing and frontier:
-        firings = fifo_firings or sim_firings or 200
-        jobs = []
-        for c in frontier:
-            g = c.plan.graph
-            prof = simulate(g, firings=firings, latency=c.plan.depth,
-                            extra_capacity=c.plan.sim_extra_capacity,
-                            profile=True)
-            c.profile = prof.profiles
-            # observed-peak trimming: occupancy never exceeded peak, so
-            # capacity=peak admits the exact same firing schedule
-            declared = {s.name: int(s.depth) for s in g.streams}
-            c.sized_capacity = {name: max(0, p.peak - declared[name])
-                                for name, p in prof.profiles.items()}
-            # sized variant paired with its uniform-headroom reference at
-            # the *same* firing count, so the verdict below is well-defined
-            # even when fifo_firings != sim_firings
-            jobs.append(SimJob(g, latency=dict(c.plan.depth),
-                               extra_capacity=dict(c.sized_capacity)))
-            jobs.append(c.plan.sim_job())
-        results = simulate_batch(jobs, firings=firings)
-        sim_calls += 1
-        for i, c in enumerate(frontier):
-            sized, uniform = results[2 * i], results[2 * i + 1]
-            if sized.deadlocked or sized.cycles != uniform.cycles:
-                # trimming broke the schedule (theoretically unreachable):
-                # revert rather than hand out an unverified sizing
-                c.sized_capacity = None
-                c.sized_sim = None
-            else:
-                c.sized_sim = sized
+# ---------------------------------------------------------------------------
+# one-call multi-device sweeps
+# ---------------------------------------------------------------------------
 
-    return SearchResult(candidates=cands, frontier=frontier,
-                        sim_calls=sim_calls, space_size=len(points))
+@dataclasses.dataclass
+class BackendSweep:
+    """Per-device-grid search results whose throughput scoring shared one
+    batched simulator call (``sim_calls`` counts that shared call once)."""
+    results: dict[str, SearchResult]
+    sim_calls: int
+
+    @property
+    def best(self) -> tuple[str, Candidate]:
+        """(grid name, candidate) of the highest-fmax routable candidate
+        across every grid."""
+        picks: dict[str, Candidate] = {}
+        for name, res in self.results.items():
+            try:
+                picks[name] = best_candidate(res.candidates)
+            except InfeasibleError:
+                continue
+        if not picks:
+            raise InfeasibleError("no routable candidate on any device grid")
+        name = max(picks, key=lambda k: picks[k].fmax)
+        return name, picks[name]
+
+    def table(self) -> list[dict]:
+        """One comparison row per grid (the multi-device sweep summary)."""
+        rows = []
+        for name, res in self.results.items():
+            try:
+                c = best_candidate(res.candidates)
+            except InfeasibleError:
+                rows.append({
+                    "grid": name, "routable": False, "fmax_mhz": 0.0,
+                    "util": None, "area_overhead_bits": None,
+                    "cycles": None, "throughput_preserved": None,
+                    "frontier": len(res.frontier),
+                })
+                continue
+            rows.append({
+                "grid": name, "routable": True, "fmax_mhz": c.fmax,
+                "util": c.point.max_util if c.point else None,
+                "area_overhead_bits": c.plan.area_overhead,
+                "cycles": c.sim.cycles if c.sim else None,
+                "throughput_preserved": c.throughput_preserved,
+                "frontier": len(res.frontier),
+            })
+        return rows
+
+
+def sweep_backends(graph: TaskGraph,
+                   grids: Mapping[str, SlotGrid] | Sequence[SlotGrid], *,
+                   space: SearchSpace | None = None,
+                   mode: str = "grid",
+                   n_samples: int = 64,
+                   sample_seed: int = 0,
+                   model: PhysicalModel = PhysicalModel(),
+                   sim_firings: int | None = 200,
+                   **ab_kwargs) -> BackendSweep:
+    """One-call multi-device sweep: the same design searched across several
+    device grids (U250/U280/TPU-pod shapes from ``repro.fpga.archs``), with
+    *all* grids' candidates plus their shared baselines scored by a single
+    ``simulate_batch`` call — the padded backend vectorizes across the
+    per-grid candidate sets even when cycle-breaking stream demotions give
+    some candidates a different topology.
+
+    ``grids`` is a name -> ``SlotGrid`` mapping, or a sequence of grids
+    keyed by their ``.name`` (duplicates get a ``#2``-style suffix).
+    Returns a ``BackendSweep``: per-grid ``SearchResult``s, ``best``
+    across grids, and a ``table()`` comparison summary.
+    """
+    if isinstance(grids, Mapping):
+        named = dict(grids)
+    else:
+        named = {}
+        for g in grids:
+            key = g.name
+            i = 2
+            while key in named:
+                key = f"{g.name}#{i}"
+                i += 1
+            named[key] = g
+    if not named:
+        raise ValueError("sweep_backends needs at least one device grid")
+
+    preps = {name: prepare_design_space(graph, g, space=space, mode=mode,
+                                        n_samples=n_samples,
+                                        sample_seed=sample_seed, model=model,
+                                        **ab_kwargs)
+             for name, g in named.items()}
+    sim_calls = 0
+    if sim_firings:
+        if pool_simulations(list(preps.values()), firings=sim_firings):
+            sim_calls = 1
+    return BackendSweep(
+        results={name: prep.finish(sim_calls=sim_calls)
+                 for name, prep in preps.items()},
+        sim_calls=sim_calls)
 
 
 # ---------------------------------------------------------------------------

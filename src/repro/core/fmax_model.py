@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Mapping
 
 from .devicegrid import SlotGrid
 from .graph import TaskGraph, area_add
@@ -59,6 +60,12 @@ class PhysicalModel:
     dense_slot_util: float = 0.85     # R2: packed slot threshold
     hbm_row_util: float = 0.95        # R3
     hbm_clk_mhz: float = 450.0
+    # FIFO buffering cost model: inserted stream buffering (registers +
+    # FIFO storage) occupies real BRAM/LUT in the slots the stream touches.
+    # Only applied when ``analyze_timing`` is given ``buffer_bits`` — the
+    # profile-driven FIFO sizer credits reclaimed bits back through this.
+    bram_bits: float = 18432.0        # one BRAM18K in bits
+    fifo_lut_per_bit: float = 0.05    # LUTRAM + control overhead per bit
 
     def local_delay(self, util: float) -> float:
         return self.t0_ns + self.alpha_ns * max(util, 0.0) ** 2
@@ -83,10 +90,14 @@ class TimingReport:
 
 
 def _slot_utils(graph: TaskGraph, grid: SlotGrid,
-                placement: dict[str, tuple[int, int]]) -> dict[tuple[int, int], float]:
+                placement: dict[str, tuple[int, int]],
+                extra_load: dict[tuple[int, int], dict[str, float]] | None = None,
+                ) -> dict[tuple[int, int], float]:
     loads: dict[tuple[int, int], dict[str, float]] = {}
     for name, slot in placement.items():
         loads[slot] = area_add(loads.get(slot, {}), graph.tasks[name].area)
+    for slot, area in (extra_load or {}).items():
+        loads[slot] = area_add(loads.get(slot, {}), area)
     utils = {}
     for slot, load in loads.items():
         cap = grid.capacity(*slot, 1.0)
@@ -113,8 +124,20 @@ def _design_frac(graph: TaskGraph, grid: SlotGrid) -> float:
 def analyze_timing(graph: TaskGraph, grid: SlotGrid,
                    placement: dict[str, tuple[int, int]] | Placement,
                    pipeline_lat: dict[str, int] | None = None,
-                   model: PhysicalModel = PhysicalModel()) -> TimingReport:
-    """Fmax/routability of a placed (optionally pipelined) design."""
+                   model: PhysicalModel = PhysicalModel(), *,
+                   buffer_bits: Mapping[str, float] | None = None,
+                   ) -> TimingReport:
+    """Fmax/routability of a placed (optionally pipelined) design.
+
+    buffer_bits — per-stream inserted buffering in bits (register depth +
+    FIFO storage, width-weighted).  When given, each stream's bits are
+    charged half to its producer slot and half to its consumer slot as
+    BRAM (``bits / bram_bits``) and LUT (``bits * fifo_lut_per_bit``)
+    load, so slot utilization — and through it fmax — reflects the real
+    buffering footprint.  Profile-driven FIFO sizing reclaims capacity,
+    lowers these charges, and therefore never scores a lower fmax than
+    the uniform-headroom design (the charge is monotone in bits).
+    """
     if isinstance(placement, Placement):
         slots_of = placement.slots
         straddle = placement.straddle
@@ -122,7 +145,20 @@ def analyze_timing(graph: TaskGraph, grid: SlotGrid,
         slots_of = placement
         straddle = {}
     lat = pipeline_lat or {}
-    utils = _slot_utils(graph, grid, slots_of)
+    extra_load: dict[tuple[int, int], dict[str, float]] | None = None
+    if buffer_bits:
+        extra_load = {}
+        for s in graph.streams:
+            bits = float(buffer_bits.get(s.name, 0.0))
+            if bits <= 0:
+                continue
+            for slot in (slots_of[s.src], slots_of[s.dst]):
+                load = extra_load.setdefault(slot, {})
+                load["BRAM"] = load.get("BRAM", 0.0) \
+                    + 0.5 * bits / model.bram_bits
+                load["LUT"] = load.get("LUT", 0.0) \
+                    + 0.5 * bits * model.fifo_lut_per_bit
+    utils = _slot_utils(graph, grid, slots_of, extra_load)
 
     # ---- R1: placement ----------------------------------------------------
     for slot, u in utils.items():

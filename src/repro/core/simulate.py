@@ -38,10 +38,12 @@ Engines
   reference semantics; the event engine is cross-checked against it on
   randomized graphs in the test suite.
 * ``simulate_batch``: many (graph, latency, capacity, II) variants at once.
-  When all jobs share one topology the per-cycle update is vectorized with
-  NumPy across variants (the explorer's max-util sweep evaluates dozens of
-  floorplan candidates per call); otherwise it falls back to per-job event
-  simulation.
+  Jobs are grouped by topology signature and *padded* to the largest
+  (task, stream) shape in the batch, so one (V, T*, S*) array-sweep covers
+  heterogeneous graphs (cross-design benchmark tables, multi-device
+  sweeps) as well as the classic fixed-topology floorplan sweep.  The
+  event engine is only used when NumPy is missing or ``backend="event"``
+  is forced.
 
 All engines implement the exact same synchronous-firing semantics: a task
 fires at cycle t iff its constraints hold on the state produced by cycles
@@ -106,6 +108,24 @@ class SimJob:
     latency: dict[str, int] | None = None
     extra_capacity: dict[str, int] | None = None
     ii: dict[str, int] | None = None
+
+
+# Python-level engine invocations since the last reset: one per event/cycle
+# engine run, one per vectorized array-sweep.  Benchmark drivers read these
+# to prove (and CI to enforce) that a suite's simulation phase stayed
+# batched instead of degrading to per-job Python loops.
+_ENGINE_INVOCATIONS = {"event": 0, "cycle": 0, "numpy": 0}
+
+
+def reset_engine_counts() -> None:
+    """Zero the global engine-invocation counters."""
+    for k in _ENGINE_INVOCATIONS:
+        _ENGINE_INVOCATIONS[k] = 0
+
+
+def engine_counts() -> dict[str, int]:
+    """Snapshot of engine invocations since the last reset."""
+    return dict(_ENGINE_INVOCATIONS)
 
 
 def pipeline_headroom(latency: Mapping[str, int]) -> dict[str, int]:
@@ -194,6 +214,7 @@ def _profiles_from_logs(m: _Model, push_times: Mapping[str, list[int]],
 
 def _simulate_event(m: _Model, *, firings: int, max_cycles: int,
                     profile: bool = False) -> SimResult:
+    _ENGINE_INVOCATIONS["event"] += 1
     names = m.names
     want = firings
     fired = {n: 0 for n in names}
@@ -313,6 +334,7 @@ def _simulate_event(m: _Model, *, firings: int, max_cycles: int,
 # ---------------------------------------------------------------------------
 
 def _simulate_cycle(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
+    _ENGINE_INVOCATIONS["cycle"] += 1
     names = m.names
     queues: dict[str, deque] = {s.name: deque() for s in m.data}
     cap, lat = m.cap, m.lat
@@ -413,11 +435,26 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
     """Simulate many (graph, latency, capacity, II) variants.
 
     ``jobs`` is a sequence of ``SimJob`` (bare ``TaskGraph``s are promoted
-    to default jobs).  When every job shares one topology — the common case
-    of sweeping floorplan candidates for a fixed design — the synchronous
-    per-cycle update is vectorized across variants with NumPy, so dozens of
-    candidates cost one array-sweep instead of dozens of Python loops.
-    Mixed topologies (or ``backend="event"``) run the event engine per job.
+    to default jobs).  Jobs are grouped by topology signature; each group
+    shares one set of task/stream index structures, and the groups are
+    *padded* to the largest (task, stream) shape in the batch so a single
+    synchronous array-sweep advances every job at once.  Padding rows are
+    inert: phantom streams are attached to no task (they can never gate a
+    firing) and phantom tasks are masked out of the firing rule and the
+    termination/deadlock checks, so each job's results are exactly those of
+    its own event simulation.
+
+    backend — "auto" (default): the padded NumPy engine whenever NumPy is
+              present and there is more than one job; a lone job runs the
+              event engine.
+              "numpy": force the array engine (works for any mix of
+              topologies; raises only when NumPy itself is missing).
+              "event": force per-job event simulation.
+
+    The common cases: a fixed-topology floorplan sweep is one group (no
+    padding waste); a cross-design benchmark table or a multi-device
+    ``sweep_backends`` comparison is a handful of groups covered by one
+    (V, T*, S*) sweep instead of V Python-level event runs.
     """
     max_cycles = max_cycles or firings * 64 + 10_000
     norm: list[SimJob] = [j if isinstance(j, SimJob) else SimJob(j)
@@ -426,13 +463,11 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
         return []
     if backend not in ("auto", "event", "numpy"):
         raise ValueError(f"unknown backend {backend!r}")
-    shared = (_np is not None and len(norm) > 1 and
-              all(j.graph is norm[0].graph or
-                  _topology_signature(j.graph) ==
-                  _topology_signature(norm[0].graph) for j in norm[1:]))
-    if backend == "numpy" and (_np is None or not (shared or len(norm) == 1)):
-        raise ValueError("numpy backend requires NumPy and a shared topology")
-    if backend == "event" or not (shared or backend == "numpy"):
+    if backend == "numpy" and _np is None:
+        raise ValueError("numpy backend requires NumPy")
+    use_numpy = (backend == "numpy"
+                 or (backend == "auto" and _np is not None and len(norm) > 1))
+    if not use_numpy:
         return [simulate(j.graph, firings=firings, latency=j.latency,
                          extra_capacity=j.extra_capacity, ii=j.ii,
                          max_cycles=max_cycles, engine="event")
@@ -440,47 +475,89 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
     return _simulate_batch_numpy(norm, firings=firings, max_cycles=max_cycles)
 
 
+class _Group:
+    """Index structures shared by one topology group, padded-row placement.
+
+    Rows ``[r0, r1)`` of the batch state arrays belong to this group; the
+    group's real tasks/streams occupy the first ``T``/``S`` columns and the
+    remaining columns up to (T*, S*) are phantom padding."""
+
+    def __init__(self, np, m0: _Model, r0: int, r1: int):
+        self.r0, self.r1 = r0, r1
+        self.names = m0.names
+        self.snames = [s.name for s in m0.data]
+        self.T, self.S = len(self.names), len(self.snames)
+        tidx = {n: i for i, n in enumerate(self.names)}
+        self.prod = np.array([tidx[m0.producer[s]] for s in self.snames],
+                             dtype=np.int64)
+        self.cons = np.array([tidx[m0.consumer[s]] for s in self.snames],
+                             dtype=np.int64)
+        # incidence matrices stream -> task (real streams only: phantom
+        # padding streams are attached to no task and can't gate anything)
+        self.a_in = np.zeros((self.S, self.T), dtype=np.int64)
+        self.a_out = np.zeros((self.S, self.T), dtype=np.int64)
+        for si in range(self.S):
+            self.a_in[si, self.cons[si]] = 1
+            self.a_out[si, self.prod[si]] = 1
+        self.indeg = self.a_in.sum(axis=0)
+        self.outdeg = self.a_out.sum(axis=0)
+
+
 def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
                           max_cycles: int) -> list[SimResult]:
-    """Vectorized synchronous per-cycle engine across variants.
+    """Padded ragged-batch synchronous engine.
 
-    State is (V, T)/(V, S) integer arrays; token visibility uses a ring
-    buffer of cumulative push counts (a token pushed at cycle u is visible
-    at u + 1 + lat, so the consumer-visible token count at cycle t is the
-    cumulative push count at cycle t - 1 - lat).  FIFO order plus constant
-    per-stream latency make that cumulative-count view exact.
+    State is (V, T*)/(V, S*) integer arrays over *all* jobs, where T*/S*
+    are the maximum task/stream counts across topology groups; token
+    visibility uses a ring buffer of cumulative push counts (a token pushed
+    at cycle u is visible at u + 1 + lat, so the consumer-visible token
+    count at cycle t is the cumulative push count at cycle t - 1 - lat).
+    FIFO order plus constant per-stream latency make that view exact.
+    Per-group incidence matmuls run on contiguous row slices inside the one
+    shared cycle loop; everything else is a full-batch array op.
     """
     np = _np
-    models = [_Model(j.graph, j.latency, j.extra_capacity, j.ii)
-              for j in jobs]
-    m0 = models[0]
-    names = m0.names
-    snames = [s.name for s in m0.data]
-    V, T, S = len(jobs), len(names), len(snames)
-    tidx = {n: i for i, n in enumerate(names)}
+    _ENGINE_INVOCATIONS["numpy"] += 1
 
-    prod = np.array([tidx[m0.producer[s]] for s in snames], dtype=np.int64) \
-        if S else np.zeros(0, dtype=np.int64)
-    cons = np.array([tidx[m0.consumer[s]] for s in snames], dtype=np.int64) \
-        if S else np.zeros(0, dtype=np.int64)
-    detached = np.array([m0.detached[n] for n in names], dtype=bool)
-    counted = ~detached
+    # ---- group jobs by topology; make groups row-contiguous --------------
+    sig_cache: dict[int, tuple] = {}
+    members: dict[tuple, list[int]] = {}
+    for v, j in enumerate(jobs):
+        sig = sig_cache.get(id(j.graph))
+        if sig is None:
+            sig = _topology_signature(j.graph)
+            sig_cache[id(j.graph)] = sig
+        members.setdefault(sig, []).append(v)
+    perm = [v for mem in members.values() for v in mem]
+    models = [_Model(jobs[v].graph, jobs[v].latency, jobs[v].extra_capacity,
+                     jobs[v].ii) for v in perm]
 
-    lat = np.array([[m.lat[s] for s in snames] for m in models],
-                   dtype=np.int64).reshape(V, S)
-    cap = np.array([[m.cap[s] for s in snames] for m in models],
-                   dtype=np.int64).reshape(V, S)
-    ii = np.array([[m.ii[n] for n in names] for m in models],
-                  dtype=np.int64).reshape(V, T)
+    groups: list[_Group] = []
+    r0 = 0
+    for mem in members.values():
+        groups.append(_Group(np, models[r0], r0, r0 + len(mem)))
+        r0 += len(mem)
 
-    # incidence matrices stream -> task
-    a_in = np.zeros((S, T), dtype=np.int64)
-    a_out = np.zeros((S, T), dtype=np.int64)
-    for si in range(S):
-        a_in[si, cons[si]] = 1
-        a_out[si, prod[si]] = 1
-    indeg = a_in.sum(axis=0)
-    outdeg = a_out.sum(axis=0)
+    V = len(jobs)
+    T = max((g.T for g in groups), default=0)
+    S = max((g.S for g in groups), default=0)
+
+    # ---- padded per-job knob arrays and masks ----------------------------
+    lat = np.zeros((V, S), dtype=np.int64)
+    cap = np.zeros((V, S), dtype=np.int64)
+    ii = np.ones((V, T), dtype=np.int64)
+    task_active = np.zeros((V, T), dtype=bool)
+    counted = np.zeros((V, T), dtype=bool)      # active and non-detached
+    for g in groups:
+        for v in range(g.r0, g.r1):
+            m = models[v]
+            if g.S:
+                lat[v, :g.S] = [m.lat[s] for s in g.snames]
+                cap[v, :g.S] = [m.cap[s] for s in g.snames]
+            if g.T:
+                ii[v, :g.T] = [m.ii[n] for n in g.names]
+                counted[v, :g.T] = [not m.detached[n] for n in g.names]
+        task_active[g.r0:g.r1, :g.T] = True
 
     H = int(lat.max(initial=0)) + 2
     hist = np.zeros((V, S, H), dtype=np.int64)     # cum pushes at cycle slot
@@ -494,9 +571,12 @@ def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
     out_dead = np.zeros(V, dtype=bool)
     steps = 0
 
+    def all_done():
+        # phantom and detached tasks are vacuously done
+        return ((fired >= firings) | ~counted).all(axis=1)
+
     for t in range(max_cycles):
-        done = (fired[:, counted] >= firings).all(axis=1)
-        newly = active & done
+        newly = active & all_done()
         if newly.any():
             out_cycles[newly] = t
             out_dead[newly] = False
@@ -511,23 +591,35 @@ def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
                                          axis=2)[:, :, 0]
             tok_ok = vis_cnt > pops
             space_ok = (pushes - pops) < cap
-            in_ok = (tok_ok.astype(np.int64) @ a_in) == indeg
-            out_ok = (space_ok.astype(np.int64) @ a_out) == outdeg
-        else:
-            in_ok = np.ones((V, T), dtype=bool)
-            out_ok = np.ones((V, T), dtype=bool)
+        in_ok = np.zeros((V, T), dtype=bool)
+        out_ok = np.zeros((V, T), dtype=bool)
+        for g in groups:
+            if g.S:
+                in_ok[g.r0:g.r1, :g.T] = (
+                    tok_ok[g.r0:g.r1, :g.S].astype(np.int64) @ g.a_in
+                ) == g.indeg
+                out_ok[g.r0:g.r1, :g.T] = (
+                    space_ok[g.r0:g.r1, :g.S].astype(np.int64) @ g.a_out
+                ) == g.outdeg
+            else:
+                in_ok[g.r0:g.r1, :g.T] = True
+                out_ok[g.r0:g.r1, :g.T] = True
 
-        can = (active[:, None] & (fired < firings) & (next_free <= t)
-               & in_ok & out_ok)
+        can = (active[:, None] & task_active & (fired < firings)
+               & (next_free <= t) & in_ok & out_ok)
         fired += can
         next_free = np.where(can, t + ii, next_free)
         if S:
-            pops += can[:, cons]
-            pushes += can[:, prod]
+            for g in groups:
+                if g.S:
+                    pops[g.r0:g.r1, :g.S] += can[g.r0:g.r1, g.cons]
+                    pushes[g.r0:g.r1, :g.S] += can[g.r0:g.r1, g.prod]
             hist[:, :, t % H] = pushes
 
         progressed = can.any(axis=1)
-        # post-update in-flight check at cycle t (matches reference engine)
+        # post-update in-flight check at cycle t (matches reference engine);
+        # phantom streams never hold tokens, phantom tasks never fire, so
+        # the padded columns are inert here too
         if S:
             nonempty = pops < pushes
             head_hidden = nonempty & (vis_cnt <= pops)
@@ -537,21 +629,24 @@ def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
         ii_flight = (next_free > t).any(axis=1)
         quiet = active & ~progressed & ~tok_flight & ~ii_flight
         if quiet.any():
-            all_done = (fired[:, counted] >= firings).all(axis=1)
+            done = all_done()
             out_cycles[quiet] = t + 1
-            out_dead[quiet] = ~all_done[quiet]
+            out_dead[quiet] = ~done[quiet]
             active &= ~quiet
             if not active.any():
                 break
 
-    still = active
-    if still.any():
-        out_cycles[still] = max_cycles
-        out_dead[still] = ~(fired[still][:, counted] >= firings).all(axis=1)
+    if active.any():
+        out_cycles[active] = max_cycles
+        out_dead[active] = ~all_done()[active]
 
-    return [SimResult(cycles=int(out_cycles[v]),
-                      fired={n: int(fired[v, i])
-                             for i, n in enumerate(names)},
-                      deadlocked=bool(out_dead[v]),
-                      steps=steps, engine="numpy-batch")
-            for v in range(V)]
+    engine = "numpy-batch" if len(groups) == 1 else "numpy-padded"
+    out: list[SimResult] = [None] * V          # type: ignore[list-item]
+    for g in groups:
+        for v in range(g.r0, g.r1):
+            out[perm[v]] = SimResult(
+                cycles=int(out_cycles[v]),
+                fired={n: int(fired[v, i]) for i, n in enumerate(g.names)},
+                deadlocked=bool(out_dead[v]),
+                steps=steps, engine=engine)
+    return out

@@ -1,4 +1,5 @@
-"""Device grids for the two boards used in the paper (§2.3, §7.1).
+"""Device grids for multi-backend sweeps: the paper's two boards (§2.3,
+§7.1) plus TPU-pod-shaped grids for cross-device comparisons.
 
   * Alveo U250: 4 dies (SLRs) stacked vertically, DDR/IO column in the
     middle -> 2 cols x 4 rows = 8 slots.  Totals (paper footnote 2):
@@ -66,3 +67,61 @@ def u280_grid(max_util: float = 0.70) -> SlotGrid:
                     row_boundaries=[_DIE() for _ in range(rows - 1)],
                     col_boundaries=[_IOCOL() for _ in range(cols - 1)],
                     max_util=max_util)
+
+
+def _ICI() -> Boundary:
+    """Intra-pod ICI hop: cheap, one buffer stage per crossing."""
+    return Boundary(weight=0.5, pipeline_depth=1, delay_ns=1.0)
+
+
+def _DCN() -> Boundary:
+    """Pod-slice (DCN) split: expensive and deep."""
+    return Boundary(weight=2.0, pipeline_depth=4, delay_ns=3.2)
+
+
+def tpu_pod_grid(rows: int = 4, cols: int = 2,
+                 max_util: float = 0.70) -> SlotGrid:
+    """A TPU-pod-shaped grid for ``sweep_backends`` cross-device studies:
+    ``rows x cols`` chip groups, row boundaries are ICI hops (cheap,
+    shallow) and column boundaries are pod-slice/DCN splits (expensive,
+    deep) — the same coarse slot/boundary abstraction the paper applies to
+    SLRs, re-parameterized to a pod topology.
+
+    Capacities reuse the FPGA resource vocabulary, scaled up so the paper's
+    benchmark graphs sweep unchanged across U250/U280/pod grids; every chip
+    group faces its own HBM stack (``hbm_channels`` in every slot)."""
+    cap = {
+        "LUT": 2400e3 / (rows * cols),
+        "FF": 4800e3 / (rows * cols),
+        "BRAM": 7168 / (rows * cols),
+        "DSP": 16384 / (rows * cols),
+        "URAM": 1792 / (rows * cols),
+    }
+    slot_caps = {(r, c): {"hbm_channels": 8.0}
+                 for r in range(rows) for c in range(cols)}
+    return SlotGrid(f"TPUpod{rows}x{cols}", rows=rows, cols=cols,
+                    base_capacity=cap, slot_caps=slot_caps,
+                    row_boundaries=[_ICI() for _ in range(rows - 1)],
+                    col_boundaries=[_DCN() for _ in range(cols - 1)],
+                    max_util=max_util)
+
+
+#: named device-grid factories for one-call multi-device sweeps
+#: (``sweep_backends(graph, {name: grid_for(name) for name in ...})``)
+DEVICE_GRIDS = {
+    "u250": u250_grid,
+    "u280": u280_grid,
+    "tpu_pod_4x2": tpu_pod_grid,
+    "tpu_pod_2x2": lambda max_util=0.70: tpu_pod_grid(
+        rows=2, cols=2, max_util=max_util),
+}
+
+
+def grid_for(name: str, **kwargs) -> SlotGrid:
+    """Instantiate a registered device grid by name."""
+    try:
+        factory = DEVICE_GRIDS[name]
+    except KeyError:
+        raise KeyError(f"unknown device grid {name!r}; "
+                       f"known: {sorted(DEVICE_GRIDS)}") from None
+    return factory(**kwargs)

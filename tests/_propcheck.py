@@ -3,12 +3,20 @@
 Uses real `hypothesis` when it is installed; otherwise provides a small,
 deterministic fixed-examples fallback implementing the subset this test
 suite uses: ``given``, ``settings`` and ``strategies.integers /
-sampled_from / floats``.
+sampled_from / floats / booleans / lists``.
 
 The fallback draws a fixed number of examples per test (boundary values
 first, then pseudo-random ones from a seed derived from the test name), so
 runs are reproducible with or without hypothesis and tier-1 never dies at
 collection on a missing optional dependency.
+
+On failure the fallback *greedily shrinks* the counterexample the way the
+real library would — integers/floats step toward 0 (clamped into range),
+sampled values move to earlier elements, lists are halved and their
+elements shrunk — re-running the test after each candidate simplification
+and keeping it only if the test still fails.  The minimal example is
+printed and its failure re-raised, so fallback-mode CI reports match the
+real-`hypothesis` job's minimized counterexamples closely.
 """
 from __future__ import annotations
 
@@ -24,33 +32,132 @@ except ModuleNotFoundError:
     import types
 
     DEFAULT_MAX_EXAMPLES = 25
+    MAX_SHRINK_TRIES = 500
+
+    try:
+        from _pytest.outcomes import Skipped as _Skipped
+    except Exception:  # pragma: no cover - pytest always present in CI
+        class _Skipped(BaseException):
+            pass
+
+    #: exceptions that must propagate, never count as falsifying examples
+    #: (Ctrl-C, interpreter exit, pytest.skip control flow)
+    _NON_FALSIFYING = (KeyboardInterrupt, SystemExit, GeneratorExit, _Skipped)
 
     class _Strategy:
-        """A value source: boundary examples first, then seeded draws."""
+        """A value source: boundary examples first, then seeded draws, plus
+        a shrinker yielding strictly-simpler candidates for a value."""
 
-        def __init__(self, edge_values, draw):
+        def __init__(self, edge_values, draw, shrink=None):
             self.edge_values = list(edge_values)
             self.draw = draw
+            self.shrink = shrink or (lambda value: ())
+
+    def _shrink_number(value, target, *, integer):
+        """Candidates between ``value`` and ``target`` (nearest-to-target
+        first: big jumps before single steps)."""
+        if value == target:
+            return
+        yield target
+        mid = (value + target) // 2 if integer else (value + target) / 2
+        if mid not in (value, target):
+            yield mid
+        if integer:
+            step = value - 1 if value > target else value + 1
+            if step != mid:
+                yield step
 
     def _integers(min_value=0, max_value=2 ** 31 - 1):
-        return _Strategy([min_value, max_value],
-                         lambda rng: rng.randint(min_value, max_value))
+        target = min(max(0, min_value), max_value)
+        return _Strategy(
+            [min_value, max_value],
+            lambda rng: rng.randint(min_value, max_value),
+            lambda v: _shrink_number(v, target, integer=True))
 
     def _sampled_from(elements):
         elems = list(elements)
+
+        def shrink(v):
+            # earlier elements are simpler; try the front first
+            try:
+                i = elems.index(v)
+            except ValueError:
+                return
+            if i > 0:
+                yield elems[0]
+            if i // 2 not in (0, i):
+                yield elems[i // 2]
+
         return _Strategy(elems[:2],
-                         lambda rng: elems[rng.randrange(len(elems))])
+                         lambda rng: elems[rng.randrange(len(elems))],
+                         shrink)
 
     def _floats(min_value=0.0, max_value=1.0, **_kw):
-        return _Strategy([min_value, max_value],
-                         lambda rng: rng.uniform(min_value, max_value))
+        target = min(max(0.0, min_value), max_value)
+        return _Strategy(
+            [min_value, max_value],
+            lambda rng: rng.uniform(min_value, max_value),
+            lambda v: _shrink_number(v, target, integer=False))
 
     def _booleans():
-        return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+        return _Strategy([False, True], lambda rng: rng.random() < 0.5,
+                         lambda v: (False,) if v else ())
+
+    def _lists(elements, *, min_size=0, max_size=8):
+        def draw(rng):
+            return [elements.draw(rng)
+                    for _ in range(rng.randint(min_size, max_size))]
+
+        def shrink(v):
+            # structural first: halves, then dropping single elements,
+            # then shrinking elements in place
+            if len(v) > min_size:
+                half = max(min_size, len(v) // 2)
+                if half < len(v):
+                    yield list(v[:half])
+                    yield list(v[len(v) - half:])
+                for i in range(len(v)):
+                    if len(v) - 1 >= min_size:
+                        yield v[:i] + v[i + 1:]
+            for i, item in enumerate(v):
+                for cand in elements.shrink(item):
+                    yield v[:i] + [cand] + v[i + 1:]
+
+        edges = [[]] if min_size == 0 else [
+            [elements.edge_values[0]] * min_size]
+        return _Strategy(edges, draw, shrink)
 
     strategies = types.SimpleNamespace(
         integers=_integers, sampled_from=_sampled_from, floats=_floats,
-        booleans=_booleans)
+        booleans=_booleans, lists=_lists)
+
+    def _shrink_case(run, strats, case):
+        """Greedy coordinate descent: repeatedly adopt the first simpler
+        per-argument candidate that still fails, until no candidate does
+        (or the try budget runs out).  Returns the minimal failing case and
+        its exception (None if nothing simpler failed)."""
+        best = list(case)
+        best_exc = None
+        tries = 0
+        improved = True
+        while improved and tries < MAX_SHRINK_TRIES:
+            improved = False
+            for i, s in enumerate(strats):
+                for cand in s.shrink(best[i]):
+                    tries += 1
+                    trial = list(best)
+                    trial[i] = cand
+                    exc = run(trial)
+                    if exc is not None:
+                        best = trial
+                        best_exc = exc
+                        improved = True
+                        break
+                    if tries >= MAX_SHRINK_TRIES:
+                        break
+                if improved or tries >= MAX_SHRINK_TRIES:
+                    break
+        return tuple(best), best_exc
 
     def given(*strats, **kw_strats):
         if kw_strats:
@@ -65,6 +172,21 @@ except ModuleNotFoundError:
                 n = getattr(wrapper, "_pc_max_examples", DEFAULT_MAX_EXAMPLES)
                 rng = random.Random(
                     f"propcheck::{fn.__module__}::{fn.__qualname__}")
+
+                def run(case):
+                    try:
+                        fn(*args, *case, **kwargs)
+                    except _Skipped:
+                        # a skip on a shrink candidate means "invalid input,
+                        # keep shrinking" (hypothesis semantics) — it must
+                        # not escape and mask the original failure
+                        return None
+                    except (KeyboardInterrupt, SystemExit, GeneratorExit):
+                        raise
+                    except BaseException as e:  # noqa: BLE001 - re-raised
+                        return e
+                    return None
+
                 for i in range(n):
                     case = tuple(
                         s.edge_values[i] if i < len(s.edge_values)
@@ -72,9 +194,16 @@ except ModuleNotFoundError:
                         for s in strats)
                     try:
                         fn(*args, *case, **kwargs)
+                    except _NON_FALSIFYING:
+                        raise
                     except BaseException:
+                        minimal, exc = _shrink_case(run, strats, case)
                         print(f"_propcheck falsifying example: "
                               f"{fn.__qualname__}{case}")
+                        if exc is not None and minimal != case:
+                            print(f"_propcheck shrunk to: "
+                                  f"{fn.__qualname__}{minimal}")
+                            raise exc
                         raise
 
             wrapper.__name__ = fn.__name__

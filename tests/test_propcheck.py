@@ -1,0 +1,133 @@
+"""Fallback-shim shrinking tests (skipped when real hypothesis is
+installed — it has its own shrinker and these internals don't exist)."""
+import pytest
+
+import _propcheck as pc
+
+pytestmark = pytest.mark.skipif(
+    pc.HAVE_HYPOTHESIS, reason="real hypothesis shrinks natively")
+
+
+def _falsify(fn):
+    """Run a @given-wrapped test expected to fail; return the exception."""
+    with pytest.raises(AssertionError) as e:
+        fn()
+    return e.value
+
+
+def test_integers_shrink_toward_zero():
+    seen = []
+
+    @pc.settings(max_examples=20)
+    @pc.given(pc.strategies.integers(0, 10_000))
+    def prop(n):
+        seen.append(n)
+        assert n < 137
+
+    _falsify(prop)
+    # the minimal falsifying example was actually executed
+    assert min(x for x in seen if x >= 137) == 137
+
+
+def test_integers_shrink_respects_min_value():
+    seen = []
+
+    @pc.settings(max_examples=20)
+    @pc.given(pc.strategies.integers(50, 10_000))
+    def prop(n):
+        seen.append(n)
+        assert False  # everything fails -> shrink to the range floor
+
+    _falsify(prop)
+    assert min(seen) == 50
+
+
+def test_lists_shrink_by_halving_and_element_shrinks():
+    seen = []
+
+    @pc.settings(max_examples=20)
+    @pc.given(pc.strategies.lists(pc.strategies.integers(0, 9),
+                                  min_size=0, max_size=8))
+    def prop(xs):
+        seen.append(list(xs))
+        assert sum(xs) < 10
+
+    _falsify(prop)
+    failing = [xs for xs in seen if sum(xs) >= 10]
+    smallest = min(failing, key=lambda xs: (len(xs), sum(xs)))
+    # greedy halving + element shrinking reaches a short, barely-failing
+    # list — not the long random one that first falsified
+    assert len(smallest) <= 3
+    assert sum(smallest) < 20
+
+
+def test_lists_shrink_respects_min_size():
+    @pc.settings(max_examples=5)
+    @pc.given(pc.strategies.lists(pc.strategies.integers(0, 3),
+                                  min_size=2, max_size=6))
+    def prop(xs):
+        assert len(xs) >= 2  # holds by construction, even while shrinking
+
+    prop()
+
+
+def test_shrunk_counterexample_is_reported(capsys):
+    @pc.settings(max_examples=10)
+    @pc.given(pc.strategies.integers(0, 1000), pc.strategies.booleans())
+    def prop(n, flag):
+        assert n < 500 or not flag
+
+    _falsify(prop)
+    out = capsys.readouterr().out
+    assert "falsifying example" in out
+    assert "shrunk to" in out
+    # the shrunk report ends at the greedy minimum: (500, True)
+    assert "(500, True)" in out
+
+
+def test_sampled_from_shrinks_to_earlier_elements():
+    seen = []
+
+    @pc.settings(max_examples=10)
+    @pc.given(pc.strategies.sampled_from(["a", "b", "c", "d"]))
+    def prop(x):
+        seen.append(x)
+        assert x == "a"
+
+    _falsify(prop)
+    assert "b" in seen  # an edge example fails...
+    # ...and shrinking never invents values outside the sample set
+    assert set(seen) <= {"a", "b", "c", "d"}
+
+
+def test_passing_property_never_shrinks():
+    calls = []
+
+    @pc.settings(max_examples=15)
+    @pc.given(pc.strategies.integers(0, 9))
+    def prop(n):
+        calls.append(n)
+        assert 0 <= n <= 9
+
+    prop()
+    assert len(calls) == 15
+
+
+def test_skip_during_shrinking_does_not_mask_failure():
+    """A pytest.skip hit on a shrink candidate counts as 'invalid input,
+    keep shrinking' — the original falsifying failure must still surface
+    as a failure, not a skip.  (A skip on a *detection* example still
+    propagates, like real hypothesis.)  The skip band [400, 600] is never
+    drawn as an edge example but shrinking from 10000 walks into it."""
+    skipped_at = []
+
+    @pc.settings(max_examples=2)  # edges only: 0 passes, 10000 fails
+    @pc.given(pc.strategies.integers(0, 10_000))
+    def prop(n):
+        if 400 <= n <= 600:
+            skipped_at.append(n)
+            pytest.skip("invalid region")
+        assert n <= 900
+
+    _falsify(prop)  # AssertionError, not Skipped
+    assert skipped_at  # shrinking really did enter the skip band

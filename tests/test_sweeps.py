@@ -1,0 +1,271 @@
+"""Multi-device sweeps, adaptive refinement, the FIFO-sizing area credit,
+and the cross-design benchmark batching acceptance.
+
+Covers the new one-call sweep path: ``prepare_design_space`` defers
+simulation, ``sweep_backends`` scores several device grids' candidates in
+one batched call, ``SearchSpace.refine`` zooms sampling into the frontier
+neighborhood, ``analyze_timing(buffer_bits=...)`` charges buffering into
+slot utilization (so profile-driven FIFO sizing credits reclaimed bits
+back as fmax), and the fmax suite's simulation phase is a single padded
+array-sweep across heterogeneous designs.
+"""
+import importlib.util
+import os
+
+import pytest
+
+from repro.core import (PhysicalModel, SearchPoint, SearchSpace,
+                        TaskGraphBuilder, analyze_timing,
+                        explore_design_space, sweep_backends)
+from repro.core import explorer as explorer_mod
+from repro.fpga import grid_for, tpu_pod_grid, u250_grid, u280_grid
+
+
+def _vecadd(pe=4):
+    b = TaskGraphBuilder("VecAdd")
+    a = b.streams("str_a", n=pe, width=512)
+    bb = b.streams("str_b", n=pe, width=512)
+    c = b.streams("str_c", n=pe, width=512)
+    b.invoke("LoadA", area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+             outs=a, count=pe)
+    b.invoke("LoadB", area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+             outs=bb, count=pe)
+    b.invoke("Add", area={"LUT": 60e3, "DSP": 256}, ins=a + bb, outs=c,
+             count=pe)
+    b.invoke("Store", area={"LUT": 12e3, "hbm_channels": 1}, ins=c, count=pe)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# sweep_backends: one batched call across device grids
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_backends_single_batched_call(monkeypatch):
+    """U250 + U280 + a TPU-pod grid: every grid's baseline + candidates
+    scored by exactly one ``simulate_batch`` call; per-grid results match
+    a standalone ``explore_design_space`` run."""
+    graph = _vecadd()
+    space = SearchSpace(utils=(0.7, 0.8))
+    calls = []
+    real_batch = explorer_mod.simulate_batch
+
+    def counting_batch(jobs, **kw):
+        jobs = list(jobs)
+        calls.append(len(jobs))
+        return real_batch(jobs, **kw)
+
+    monkeypatch.setattr(explorer_mod, "simulate_batch", counting_batch)
+    grids = {"u250": u250_grid(), "u280": u280_grid(),
+             "tpu": tpu_pod_grid(2, 2)}
+    sweep = sweep_backends(graph, grids, space=space, sim_firings=80)
+    assert len(calls) == 1 and sweep.sim_calls == 1
+    assert set(sweep.results) == set(grids)
+    for name, res in sweep.results.items():
+        assert res.space_size == space.size
+        for c in res.candidates:
+            if c.plan is not None:
+                assert c.sim is not None and c.base_sim is not None
+        # matches a standalone per-grid search (same knobs, own batch call)
+        solo = explore_design_space(graph, grids[name], space=space,
+                                    sim_firings=80)
+        assert [c.fmax for c in res.candidates] == \
+            [c.fmax for c in solo.candidates]
+        assert [(c.sim.cycles, c.sim.deadlocked)
+                for c in res.candidates if c.sim] == \
+            [(c.sim.cycles, c.sim.deadlocked)
+             for c in solo.candidates if c.sim]
+    name, best = sweep.best
+    assert name in grids and best.report.routed
+    rows = sweep.table()
+    assert {r["grid"] for r in rows} == set(grids)
+    assert all(r["fmax_mhz"] > 0 for r in rows if r["routable"])
+
+
+def test_sweep_backends_accepts_grid_sequences():
+    graph = _vecadd()
+    sweep = sweep_backends(graph, [u280_grid(), u280_grid()],
+                           space=SearchSpace(utils=(0.8,)), sim_firings=40)
+    assert set(sweep.results) == {"U280", "U280#2"}
+    with pytest.raises(ValueError):
+        sweep_backends(graph, [], sim_firings=40)
+
+
+def test_device_grid_registry():
+    assert grid_for("u250").name == "U250"
+    assert grid_for("tpu_pod_4x2").rows == 4
+    with pytest.raises(KeyError):
+        grid_for("nonesuch")
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace.refine
+# ---------------------------------------------------------------------------
+
+
+def test_refine_zooms_into_frontier_neighborhood():
+    space = SearchSpace(seeds=(0, 1, 2), utils=(0.6, 0.7, 0.8),
+                        depth_scales=(1.0, 2.0, 4.0))
+    frontier = [SearchPoint(seed=1, max_util=0.7, depth_scale=2.0)]
+    pts = space.refine(frontier, 50, seed=9)
+    assert pts and len(pts) == len(set(pts))
+    # seeds restricted to the frontier's; numeric axes stay within one
+    # original-grid step of the frontier values (midpoint halving)
+    for p in pts:
+        assert p.seed == 1
+        assert 0.6 <= p.max_util <= 0.8
+        assert 1.0 <= p.depth_scale <= 4.0
+    # midpoints toward the adjacent original values are present
+    utils = {p.max_util for p in pts}
+    for want in (0.65, 0.7, 0.75):
+        assert any(abs(u - want) < 1e-9 for u in utils), (want, utils)
+    # deterministic and capped by the refined-space size
+    assert pts == space.refine(frontier, 50, seed=9)
+    # n smaller than the neighborhood samples without replacement
+    assert len(space.refine(frontier, 3, seed=0)) == 3
+    # empty frontier degrades to plain sampling of the original space
+    assert space.refine([], 5, seed=1) == space.sample(5, seed=1)
+
+
+def test_refine_accepts_candidates_and_feeds_points_search():
+    graph = _vecadd()
+    grid = u280_grid()
+    space = SearchSpace(utils=(0.7, 0.8))
+    res = explore_design_space(graph, grid, space=space, sim_firings=40)
+    pts = space.refine(res.frontier, 6, seed=2)
+    assert pts
+    zoom = explore_design_space(graph, grid, points=pts, sim_firings=40)
+    assert zoom.space_size == len(pts)
+    assert zoom.best.fmax >= 0.95 * res.best.fmax
+
+
+# ---------------------------------------------------------------------------
+# FIFO-sizing area credit (fmax surrogate feedback)
+# ---------------------------------------------------------------------------
+
+
+def test_buffer_bits_charge_is_monotone():
+    """More buffered bits -> more slot load -> never a higher fmax."""
+    graph = _vecadd()
+    grid = u280_grid()
+    pl = {n: (0, 0) if i % 2 else (1, 0)
+          for i, n in enumerate(graph.tasks)}
+    small = {s.name: 1e3 for s in graph.streams}
+    big = {s.name: 4e6 for s in graph.streams}
+    r0 = analyze_timing(graph, grid, pl)
+    r_small = analyze_timing(graph, grid, pl, buffer_bits=small)
+    r_big = analyze_timing(graph, grid, pl, buffer_bits=big)
+    assert r_small.fmax_mhz <= r0.fmax_mhz
+    assert r_big.fmax_mhz < r_small.fmax_mhz
+    # the charge lands in slot utilization, not just the fmax number
+    assert max(r_big.slot_util.values()) > max(r0.slot_util.values())
+
+
+def test_sized_candidate_never_scores_below_uniform_twin():
+    """Regression (ROADMAP item): crediting reclaimed FIFO bits back into
+    slot utilization must never score the sized design below its
+    uniform-headroom twin."""
+    graph = _vecadd()
+    grid = u280_grid()
+    model = PhysicalModel()
+    res = explore_design_space(graph, grid,
+                               space=SearchSpace(utils=(0.7, 0.8)),
+                               model=model, sim_firings=60, fifo_sizing=True)
+    assert res.frontier
+    for c in res.frontier:
+        assert c.sized_capacity is not None
+        assert c.sized_report is not None and c.uniform_report is not None
+        assert c.fifo_savings_bits >= 0
+        assert c.sized_report.fmax_mhz >= c.uniform_report.fmax_mhz
+
+
+# ---------------------------------------------------------------------------
+# cross-design benchmark batching (fmax suite acceptance)
+# ---------------------------------------------------------------------------
+
+
+def _load_bench(name):
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "benchmarks", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_fmax_suite_fast_subset_is_one_padded_sweep():
+    """Acceptance: the fast subset's whole simulation phase is one padded
+    array-sweep — >= 3x fewer Python-level simulation invocations than the
+    one-batch-per-design path it replaces, with zero event-engine runs."""
+    fs = _load_bench("fmax_suite")
+    from repro.fpga import benchmarks as B
+    entries = [fs.prepare(name, board, graph)
+               for name, board, graph in B.autobridge_suite()
+               if name in fs.FAST_SUBSET]
+    assert len(entries) >= 6          # 6 designs, some on both boards
+    sim = fs.score_all(entries, 60)
+    assert sim["counts"]["numpy"] == 1
+    assert sim["counts"]["event"] == 0
+    assert sim["backends"] == ["numpy-padded"]
+    # the replaced path issued one simulate_batch per design
+    assert sim["invocations"] * 3 <= len(entries)
+    rows = [fs.finish(e, 60) for e in entries]
+    for r in rows:
+        assert r["opt_mhz"] > 0, r
+        assert r["sim_deadlock"] is False
+        assert r["throughput_preserved"] is True
+        assert r["backend_used"] == "numpy-padded"
+
+
+def test_check_regression_flags_event_fallback(tmp_path):
+    """The CI gate fails a fast-subset run whose simulation phase degraded
+    to per-job event simulation."""
+    import json
+    cr = _load_bench("check_regression")
+
+    def doc(counts):
+        return {
+            "suite": "fmax_suite",
+            "subset": ["stencil_x2"],
+            "rows": [{"name": "d", "board": "u280", "opt_mhz": 300.0}],
+            "summary": {
+                "opt_avg_mhz": 300.0,
+                "sim_deadlocks": 0,
+                "throughput_violations": 0,
+            },
+            "sim": {"counts": counts,
+                    "invocations": sum(counts.values())},
+        }
+
+    def write(name, d):
+        p = tmp_path / name
+        p.write_text(json.dumps(d))
+        return str(p)
+
+    base = write("base.json", doc({"event": 0, "cycle": 0, "numpy": 1}))
+    good = write("good.json", doc({"event": 0, "cycle": 0, "numpy": 1}))
+    fell = write("fell.json", doc({"event": 12, "cycle": 0, "numpy": 0}))
+    multi = write("multi.json", doc({"event": 0, "cycle": 0, "numpy": 5}))
+    assert cr.main([good, base]) == 0
+    assert cr.main([fell, base]) == 1
+    assert cr.main([multi, base]) == 1
+    # vacuous pass closed: a sim phase that never ran is also a failure
+    none_ran = write("none.json", doc({"event": 0, "cycle": 0, "numpy": 0}))
+    assert cr.main([none_ran, base]) == 1
+    cycled = write("cycled.json", doc({"event": 0, "cycle": 3, "numpy": 1}))
+    assert cr.main([cycled, base]) == 1
+
+    # the throughput suite shares the gate (no subset key: always applies)
+    def tdoc(counts):
+        return {
+            "suite": "throughput",
+            "rows": [{"name": "d", "cycles_tapa": 100}],
+            "sim": {"counts": counts,
+                    "invocations": sum(counts.values())},
+        }
+
+    tbase = write("tbase.json", tdoc({"event": 0, "cycle": 0, "numpy": 1}))
+    tfell = write("tfell.json", tdoc({"event": 5, "cycle": 0, "numpy": 0}))
+    assert cr.main([tbase, tbase]) == 0
+    assert cr.main([tfell, tbase]) == 1
