@@ -9,6 +9,15 @@ regress beyond tolerance:
   relative to baseline; no simulated deadlocks; no throughput violations;
   and (for subset runs, i.e. the CI fast gate) the simulation phase must
   have stayed vectorized — any per-job event-engine fallback fails.
+* fmax suite, converged runs (``fmax_suite.py --converge``, JSON carries
+  ``"converge": true``): the same fmax/deadlock/violation gates against the
+  *non-converged* baseline (the converged anchors include the discrete
+  sweep, so the frontier can only match or beat it), plus the floorplan
+  memoization proof — the ``sim.floorplan`` counters must show cache hits
+  > 0 and strictly fewer ILP-backed solves than points evaluated.  The
+  one-array-sweep rule is waived (each refine round is its own batch), but
+  the padded array backend must have run at least once and a per-job
+  cycle-engine fallback still fails.
 * throughput suite: per-design TAPA cycle counts must not grow more than
   ``--tol`` relative to baseline; every baseline design must still be
   present; the vectorization gate always applies (the throughput suite is
@@ -59,6 +68,48 @@ def check_sim(cur: dict, *, label: str) -> list[str]:
     return errors
 
 
+def check_converged_sim(cur: dict, *, label: str) -> list[str]:
+    """The converged-mode gate: prove the floorplan memoization fired.
+
+    A converged run without cache hits (or with one ILP solve per point)
+    means the refine rounds silently degraded to cold re-solving — the
+    exact cost the ``FloorplanCache`` exists to remove.  The per-round
+    batches must also have reached the padded array backend at least once
+    (``numpy`` invocations > 0): the real degrade path is per-job *event*
+    simulation, which is legitimate only for stray single-job rounds, so
+    the gate checks the array backend ran rather than that event never
+    did."""
+    sim = cur.get("sim")
+    if sim is None:
+        return []
+    errors = []
+    counts = sim.get("counts", {})
+    if counts.get("cycle", 0):
+        errors.append(
+            f"{label} fell back to per-job cycle simulation "
+            f"({counts['cycle']} run(s); expected 0)"
+        )
+    if not counts.get("numpy", 0):
+        errors.append(
+            f"{label} never reached the padded array backend "
+            f"(0 numpy array-sweeps; per-round batches degraded to "
+            f"per-job event simulation)"
+        )
+    fp = sim.get("floorplan", {})
+    if fp.get("cache_hits", 0) <= 0:
+        errors.append(
+            f"{label} recorded no floorplan cache hits — memoization "
+            f"silently dead"
+        )
+    points = sim.get("points_evaluated", 0)
+    if points and fp.get("solved", 0) >= points:
+        errors.append(
+            f"{label} solved {fp.get('solved', 0)} floorplans for "
+            f"{points} points evaluated (expected strictly fewer)"
+        )
+    return errors
+
+
 def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
     errors = []
     cs, bs = cur["summary"], base["summary"]
@@ -74,7 +125,9 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
         errors.append(
             f"{cs['throughput_violations']} design(s) lost steady-state throughput"
         )
-    if cur.get("subset"):
+    if cur.get("converge"):
+        errors += check_converged_sim(cur, label="converged run")
+    elif cur.get("subset"):
         errors += check_sim(cur, label="fast subset")
     cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
     for r in base["rows"]:

@@ -19,9 +19,19 @@ verify the fast subset never degrades to per-job event simulation.
 Paper targets: baseline avg 147 MHz (failures counted as 0), optimized avg
 297 MHz; 16/43 baseline failures, all recovered (avg 274 MHz).
 
+Converged mode (``--converge``): every design instead runs
+``search_until_converged`` over a *continuous* util range anchored on the
+discrete UTIL_SWEEP grid — refine rounds re-anchor on the incumbent Pareto
+frontier, all rounds share one ``FloorplanCache`` and the round-1 baseline
+simulation, and the JSON ``sim`` block records ``floorplan`` solve/cache-hit
+counters plus ``points_evaluated`` so the CI gate can *prove* the
+memoization fired (cache hits > 0, solves < points).  Because the anchors
+are exactly the default path's sweep, a converged run's frontier can never
+score below the non-converged baseline JSON it is gated against.
+
 CLI:
     python benchmarks/fmax_suite.py [--subset fast|full] [--json PATH]
-                                    [--firings N] [--no-sim]
+                                    [--firings N] [--no-sim] [--converge]
 """
 from __future__ import annotations
 
@@ -29,8 +39,11 @@ import argparse
 import json
 import time
 
-from repro.core import (InfeasibleError, SearchSpace, analyze_timing,
-                        packed_placement, prepare_design_space,
+from repro.core import (FloorplanCache, InfeasibleError, Interval,
+                        SearchPoint, SearchSpace, analyze_timing,
+                        engine_counts, floorplan_counts, packed_placement,
+                        prepare_design_space, reset_engine_counts,
+                        reset_floorplan_counts, search_until_converged,
                         timed_pool_simulations)
 from repro.fpga import benchmarks as B, grid_for
 
@@ -44,6 +57,12 @@ FAST_SUBSET = ("stencil_x2", "stencil_x4", "cnn_13x2", "gaussian_12",
 #: throughput-preservation firings used by the default path (satisfies the
 #: ROADMAP item: cycles are checked on every run, not a spot-check subset)
 DEFAULT_FIRINGS = 200
+
+#: converged-mode budget: refine rounds per design and configurations per
+#: round (round 1 = the UTIL_SWEEP anchors + random draws from the
+#: continuous range; later rounds = frontier anchors + refined draws)
+CONVERGE_ROUNDS = 3
+CONVERGE_POINTS = 12
 
 
 def prepare(name: str, board: str, graph) -> dict:
@@ -73,40 +92,78 @@ def score_all(entries: list[dict], sim_firings: int | None) -> dict | None:
     return meta
 
 
-def finish(entry: dict, sim_firings: int | None) -> dict:
-    """Frontier + row assembly for one prepared (and batch-scored) design."""
-    graph, base = entry["graph"], entry["base"]
-    res = entry["prep"].finish(sim_calls=1 if sim_firings else 0)
+def assemble_row(name: str, board: str, graph, grid, base_pl, base, res, *,
+                 wall: float, sim_firings: int | None) -> dict:
+    """Best-candidate resolution (with the unroutable fallback) plus the
+    row schema shared by the default and converged paths.  One definition
+    on purpose: ``check_regression`` compares both paths' rows against the
+    same committed baseline, so the schemas must never drift.
+
+    ``res`` is anything with ``.best`` (raising ``InfeasibleError`` when no
+    candidate routes) and ``.frontier`` — a ``SearchResult`` or a
+    ``ConvergedSearch``."""
     cand = None
     try:
         cand = res.best
         util, opt = cand.point.max_util, cand.report
         overhead = cand.plan.area_overhead
-        frontier = len(res.frontier)
     except InfeasibleError as e:
-        util, overhead, frontier = None, 0.0, 0
-        opt = analyze_timing(graph, entry["grid"], entry["base_pl"])
+        util, overhead = None, 0.0
+        opt = analyze_timing(graph, grid, base_pl)
         opt.routed, opt.fmax_mhz, opt.fail_reason = False, 0.0, str(e)
     row = {
-        "name": entry["name"], "board": entry["board"],
+        "name": name, "board": board,
         "tasks": graph.num_tasks, "streams": graph.num_streams,
         "base_mhz": base.fmax_mhz if base.routed else 0.0,
         "base_fail": None if base.routed else base.fail_reason,
         "opt_mhz": opt.fmax_mhz if opt.routed else 0.0,
         "opt_fail": None if opt.routed else opt.fail_reason,
-        "util": util, "wall_s": entry["wall_s"],
+        "util": util, "wall_s": wall,
         "buffer_overhead_bits": overhead,
-        "frontier": frontier,
+        "frontier": len(res.frontier),
     }
     if sim_firings and cand is not None and cand.sim is not None:
         # throughput preservation by dataflow simulation (paper Tables 4-7):
-        # scored for every candidate inside the suite-wide batched call.
+        # scored for every candidate inside the batched call(s).
         row["cycles_base"] = cand.base_sim.cycles
         row["cycles_opt"] = cand.sim.cycles
         row["cycles_delta"] = cand.sim.cycles - cand.base_sim.cycles
         row["sim_deadlock"] = cand.sim.deadlocked
         row["throughput_preserved"] = cand.throughput_preserved
         row["backend_used"] = cand.sim.engine
+    return row
+
+
+def finish(entry: dict, sim_firings: int | None) -> dict:
+    """Frontier + row assembly for one prepared (and batch-scored) design."""
+    res = entry["prep"].finish(sim_calls=1 if sim_firings else 0)
+    return assemble_row(entry["name"], entry["board"], entry["graph"],
+                        entry["grid"], entry["base_pl"], entry["base"], res,
+                        wall=entry["wall_s"], sim_firings=sim_firings)
+
+
+def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
+                  cache: FloorplanCache) -> dict:
+    """One design through ``search_until_converged``: continuous util range
+    anchored on the discrete UTIL_SWEEP grid, shared floorplan cache."""
+    grid = grid_for(board)
+    base_pl = packed_placement(graph, grid)
+    base = analyze_timing(graph, grid, base_pl)
+    anchors = [SearchPoint(seed=0, max_util=u) for u in UTIL_SWEEP]
+    t0 = time.monotonic()
+    res = search_until_converged(
+        graph, grid,
+        space=SearchSpace(utils=Interval(UTIL_SWEEP[0], UTIL_SWEEP[-1])),
+        rounds=CONVERGE_ROUNDS, points_per_round=CONVERGE_POINTS,
+        sim_firings=sim_firings, initial_points=anchors, cache=cache)
+    row = assemble_row(name, board, graph, grid, base_pl, base, res,
+                       wall=time.monotonic() - t0, sim_firings=sim_firings)
+    row.update({
+        "rounds_run": res.rounds_run,
+        "converged": res.converged,
+        "points_evaluated": res.points_evaluated,
+        "hypervolume": res.hypervolumes[-1] if res.hypervolumes else 0.0,
+    })
     return row
 
 
@@ -174,6 +231,56 @@ def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
     return rows
 
 
+def main_converged(verbose: bool = True,
+                   sim_firings: int | None = DEFAULT_FIRINGS,
+                   subset: tuple[str, ...] | None = None,
+                   json_path: str | None = None) -> list[dict]:
+    """The ``--converge`` path: per-design ``search_until_converged`` with a
+    suite-wide ``FloorplanCache``; the JSON ``sim`` block carries the
+    floorplan solve/cache-hit counters the CI gate checks."""
+    reset_engine_counts()
+    reset_floorplan_counts()
+    cache = FloorplanCache()
+    t0 = time.monotonic()
+    rows = []
+    for name, board, graph in B.autobridge_suite():
+        if subset is not None and name not in subset:
+            continue
+        r = run_converged(name, board, graph, sim_firings=sim_firings,
+                          cache=cache)
+        rows.append(r)
+        if verbose:
+            base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
+            opt = f"{r['opt_mhz']:.0f}" if not r["opt_fail"] else "FAIL"
+            print(f"fmax_suite,{r['name']}@{r['board']},{r['wall_s']*1e6:.0f},"
+                  f"base={base}MHz opt={opt}MHz util={r['util']} "
+                  f"rounds={r['rounds_run']} converged={r['converged']} "
+                  f"points={r['points_evaluated']}")
+    fp = floorplan_counts()
+    sim_meta = {"firings": sim_firings, "mode": "converged",
+                "counts": engine_counts(), "floorplan": fp,
+                "cache": cache.stats(),
+                "points_evaluated": sum(r["points_evaluated"] for r in rows),
+                "wall_s": time.monotonic() - t0}
+    s = summarize(rows)
+    print(f"fmax_suite,SUMMARY,0,designs={s['designs']} "
+          f"opt_avg={s['opt_avg_mhz']:.0f}MHz (converged) "
+          f"deadlocks={s['sim_deadlocks']}")
+    print(f"fmax_suite,FLOORPLAN,0,solved={fp['solved']} "
+          f"cache_hits={fp['cache_hits']} "
+          f"ilp_bipartitions={fp['ilp_bipartitions']} "
+          f"points={sim_meta['points_evaluated']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"suite": "fmax_suite", "converge": True,
+                       "sim_firings": sim_firings,
+                       "subset": sorted(subset) if subset else None,
+                       "rows": rows, "summary": s, "sim": sim_meta},
+                      f, indent=2)
+        print(f"fmax_suite,JSON,0,wrote {json_path}")
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--subset", choices=("fast", "full"), default="full",
@@ -184,7 +291,12 @@ if __name__ == "__main__":
                     help="throughput-sim firings per task (0 disables)")
     ap.add_argument("--no-sim", action="store_true",
                     help="skip throughput simulation entirely")
+    ap.add_argument("--converge", action="store_true",
+                    help="run search_until_converged per design (continuous "
+                         "util range, memoized floorplans, cache stats in "
+                         "the JSON sim block)")
     args = ap.parse_args()
-    main(sim_firings=None if args.no_sim else (args.firings or None),
-         subset=FAST_SUBSET if args.subset == "fast" else None,
-         json_path=args.json_path)
+    driver = main_converged if args.converge else main
+    driver(sim_firings=None if args.no_sim else (args.firings or None),
+           subset=FAST_SUBSET if args.subset == "fast" else None,
+           json_path=args.json_path)

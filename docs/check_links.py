@@ -1,0 +1,112 @@
+"""Stdlib-only markdown link/anchor checker for the docs CI job.
+
+Checks every inline markdown link ``[text](target)`` in the given files:
+
+* relative file targets must exist (resolved against the linking file);
+* ``#anchor`` fragments — bare or on a relative target — must match a
+  heading in the target file, using GitHub's slugification (lowercase,
+  spaces to hyphens, punctuation stripped, ``-N`` suffixes for repeats);
+* external ``http(s)``/``mailto`` targets are skipped (no network in CI).
+
+Usage:
+    python docs/check_links.py README.md docs/*.md
+
+Exits nonzero listing every broken link.  No dependencies beyond the
+standard library, by design: the container and the docs job install
+nothing for it.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+#: inline links; [text](target) with no nesting, images included
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str, seen: dict[str, int]) -> str:
+    """GitHub's anchor slug for a heading text (with repeat suffixes)."""
+    # drop inline code/emphasis markers, then non-word punctuation
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    slug = text.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    seen: dict[str, int] = {}
+    out: set[str] = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(github_slug(m.group(2), seen))
+    return out
+
+
+def links_of(path: pathlib.Path) -> list[str]:
+    out: list[str] = []
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        out.extend(m.group(1) for m in LINK_RE.finditer(line))
+    return out
+
+
+def check(files: list[str]) -> list[str]:
+    errors: list[str] = []
+    for name in files:
+        src = pathlib.Path(name)
+        if not src.is_file():
+            errors.append(f"{name}: file not found")
+            continue
+        for target in links_of(src):
+            if re.match(r"^(https?|mailto):", target):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = src if not target else (src.parent / target)
+            if not dest.exists():
+                errors.append(f"{src}: broken link -> {target}")
+                continue
+            if frag is not None:
+                if dest.is_dir() or dest.suffix.lower() not in (".md", ""):
+                    continue
+                if frag not in anchors_of(dest):
+                    errors.append(
+                        f"{src}: missing anchor -> {target or dest.name}"
+                        f"#{frag}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = check(argv)
+    if errors:
+        print(f"BROKEN LINKS ({len(errors)}):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"OK: {len(argv)} file(s), all links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

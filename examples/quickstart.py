@@ -9,8 +9,10 @@ throughput-scored in batched simulator calls and Pareto-pruned.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (SearchSpace, TaskGraphBuilder, analyze_timing,
-                        autobridge, explore_design_space, packed_placement,
+from repro.core import (Interval, SearchSpace, TaskGraphBuilder,
+                        analyze_timing, autobridge, explore_design_space,
+                        floorplan_counts, packed_placement,
+                        reset_floorplan_counts, search_until_converged,
                         sweep_backends)
 from repro.fpga import tpu_pod_grid, u250_grid, u280_grid
 
@@ -62,6 +64,31 @@ print(f"best: {best.fmax:.0f} MHz at util={best.point.max_util} "
       f"depth_scale={best.point.depth_scale} "
       f"(throughput preserved: {best.throughput_preserved}, "
       f"FIFO bits saved by profile-driven sizing: {best.fifo_savings_bits:.0f})")
+
+# converging search: continuous knob ranges instead of value lists, and the
+# refine -> search loop closed automatically — each round re-anchors on the
+# incumbent Pareto frontier and narrows the ranges around it, stopping when
+# the frontier's hypervolume stops improving.  The baseline simulation runs
+# once (round 1) and every round shares one FloorplanCache, so re-anchored
+# configurations skip the ILP solve — floorplan_counts() proves it.
+reset_floorplan_counts()
+conv = search_until_converged(
+    graph, grid,
+    space=SearchSpace(seeds=(0, 1), utils=Interval(0.6, 0.9),
+                      row_weights=Interval(1.0, 2.0),
+                      depth_scales=(1.0, 2.0)),
+    rounds=4, tol=0.02, points_per_round=16, sim_firings=200)
+fc = floorplan_counts()
+print(f"converged search: {conv.rounds_run} rounds "
+      f"({'converged' if conv.converged else 'budget exhausted'}), "
+      f"{conv.points_evaluated} points, frontier {len(conv.frontier)}, "
+      f"hypervolume {' -> '.join(f'{h:.3g}' for h in conv.hypervolumes)}")
+print(f"floorplans: {fc['solved']} solved, {fc['cache_hits']} cache hits "
+      f"({fc['ilp_bipartitions']} ILP bipartitions total)")
+cbest = conv.best
+print(f"converged best: {cbest.fmax:.0f} MHz at "
+      f"util={cbest.point.max_util:.3f} (>= single-round best: "
+      f"{cbest.fmax >= best.fmax})")
 
 # multi-device sweep: the same design searched across U250, U280 and a
 # TPU-pod-shaped grid — every grid's candidates are throughput-scored in a

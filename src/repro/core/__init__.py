@@ -1,16 +1,19 @@
 """repro.core — the paper's contribution: task-parallel dataflow graphs,
 coarse-grained floorplanning co-optimized with compilation, throughput-safe
 latency balancing, and HBM/channel binding."""
-from .autobridge import Plan, autobridge
+from .autobridge import (FloorplanCache, Plan, autobridge, floorplan_counts,
+                         reset_floorplan_counts)
 from .balance import BalanceResult, CycleError, balance_graph, balance_latencies
 from .devicegrid import Boundary, SlotGrid
 from .floorplan import Floorplan, floorplan
 from .graph import Stream, Task, TaskGraph, TaskGraphBuilder
-from .explorer import (BackendSweep, Candidate, DeferredSearch, SearchPoint,
+from .explorer import (BackendSweep, Candidate, ConvergedSearch,
+                       DeferredSearch, Interval, SearchPoint,
                        SearchResult, SearchSpace, best_candidate,
                        explore_design_space, explore_floorplans,
-                       pareto_frontier, pareto_indices, pool_simulations,
-                       prepare_design_space, sweep_backends,
+                       hypervolume, pareto_frontier, pareto_indices,
+                       pool_simulations, prepare_design_space,
+                       search_until_converged, sweep_backends,
                        timed_pool_simulations)
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing, packed_placement
 from .ilp import InfeasibleError
@@ -20,14 +23,18 @@ from .simulate import (SimJob, SimResult, StreamProfile, engine_counts,
                        simulate_batch)
 
 __all__ = [
-    "Plan", "autobridge", "BalanceResult", "CycleError", "balance_graph",
+    "FloorplanCache", "Plan", "autobridge", "floorplan_counts",
+    "reset_floorplan_counts",
+    "BalanceResult", "CycleError", "balance_graph",
     "balance_latencies", "Boundary", "SlotGrid", "Floorplan", "floorplan",
     "Stream", "Task", "TaskGraph", "TaskGraphBuilder", "InfeasibleError",
     "PipelineAssignment", "assign_pipelining",
-    "BackendSweep", "Candidate", "DeferredSearch", "best_candidate",
-    "explore_floorplans", "pool_simulations", "prepare_design_space",
-    "sweep_backends", "timed_pool_simulations",
-    "SearchPoint", "SearchResult", "SearchSpace", "explore_design_space",
+    "BackendSweep", "Candidate", "ConvergedSearch", "DeferredSearch",
+    "best_candidate", "explore_floorplans", "pool_simulations",
+    "prepare_design_space", "search_until_converged", "sweep_backends",
+    "timed_pool_simulations",
+    "Interval", "SearchPoint", "SearchResult", "SearchSpace",
+    "explore_design_space", "hypervolume",
     "pareto_frontier", "pareto_indices",
     "PhysicalModel", "TimingReport", "analyze_timing", "packed_placement",
     "SimJob", "SimResult", "StreamProfile", "engine_counts",

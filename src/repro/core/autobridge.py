@@ -12,6 +12,22 @@ If the balancer reports a pipelined dependency cycle, the cycle's tasks are
 constrained into one slot and the floorplan is re-run (at most
 ``max_feedback`` times), exactly mirroring the paper's behaviour on the
 page-rank benchmark.
+
+Floorplan memoization
+---------------------
+The partitioning ILP is the dominant per-point cost of a design-space
+sweep (the AutoBridge observation the paper builds on), and converging
+searches revisit knob configurations on purpose: refine rounds re-anchor
+on the incumbent frontier, ``sweep_backends`` re-searches the same graph
+per device grid, and depth-scale variants share a floorplan outright.
+``FloorplanCache`` memoizes ``floorplan()`` results by everything the ILP
+actually depends on — graph topology/areas/widths, grid shape/capacities/
+boundary *weights* (pipeline depths and physical delays are irrelevant to
+the partitioning objective), max-util, co-location constraints and solver
+knobs — so re-landing on a solved configuration costs a dict lookup.
+``floorplan_counts()`` mirrors ``simulate.engine_counts()``: global
+counters benchmarks and the CI regression gate read to *prove* the
+memoization actually fired instead of silently re-solving.
 """
 from __future__ import annotations
 
@@ -21,9 +37,123 @@ from .balance import BalanceResult, CycleError, balance_graph
 from .devicegrid import SlotGrid
 from .floorplan import Floorplan, floorplan
 from .graph import TaskGraph
-from .ilp import InfeasibleError
+from .ilp import InfeasibleError, reset_solve_counts, solve_counts
 from .pipelining import PipelineAssignment, assign_pipelining
 from .simulate import SimJob, SimResult, simulate_batch
+
+# Floorplan solves / cache hits since the last reset (module-global, like
+# the simulator's engine counters): ``solved`` counts actual ILP-backed
+# ``floorplan()`` runs, ``cache_hits`` counts solves a ``FloorplanCache``
+# answered from memory.  ``floorplan_counts()`` adds the bipartition-solver
+# invocation count from ``ilp`` so a sweep can report exactly how many ILPs
+# it paid for versus how many points it evaluated.
+_FP_COUNTS = {"solved": 0, "cache_hits": 0}
+
+
+def reset_floorplan_counts() -> None:
+    """Zero the global floorplan solve/cache-hit counters (and the
+    underlying bipartition-solver counter)."""
+    _FP_COUNTS["solved"] = 0
+    _FP_COUNTS["cache_hits"] = 0
+    reset_solve_counts()
+
+
+def floorplan_counts() -> dict[str, int]:
+    """Snapshot of floorplan solves, cache hits and raw bipartition-solver
+    invocations since the last reset."""
+    out = dict(_FP_COUNTS)
+    out["ilp_bipartitions"] = solve_counts()["bipartitions"]
+    return out
+
+
+def _graph_signature(graph: TaskGraph) -> tuple:
+    """Everything about the graph the floorplan ILP can observe: task names,
+    resource vectors and pins, plus stream endpoints and widths (stream
+    depth and control flags never enter the partitioning objective)."""
+    return (
+        tuple((n, tuple(sorted(t.area.items())), t.pinned)
+              for n, t in graph.tasks.items()),
+        tuple((s.name, s.src, s.dst, float(s.width)) for s in graph.streams),
+    )
+
+
+def _grid_signature(grid: SlotGrid) -> tuple:
+    """Everything about the grid the floorplan ILP can observe: shape,
+    capacities and boundary crossing *weights*.  Pipeline depths and
+    physical delays only affect pipelining and the fmax surrogate, so
+    depth-scale variants of one grid share a signature (and a floorplan)."""
+    return (
+        grid.rows, grid.cols,
+        tuple(sorted(grid.base_capacity.items())),
+        tuple(sorted((slot, tuple(sorted(caps.items())))
+                     for slot, caps in grid.slot_caps.items())),
+        tuple(b.weight for b in grid.row_boundaries),
+        tuple(b.weight for b in grid.col_boundaries),
+    )
+
+
+class FloorplanCache:
+    """Memoizes ``floorplan()`` solves (and infeasibility verdicts) across
+    explorer calls, refine rounds and device sweeps.
+
+    The key covers every input the ILP depends on; on a hit the stored
+    ``Floorplan`` is returned with its ``grid`` swapped for the caller's
+    working grid (same weights by construction — only pipeline depths may
+    differ, and those are floorplan-irrelevant).  Infeasible configurations
+    are cached too, so a sweep does not re-prove infeasibility per round.
+
+    Instances are plain dict wrappers: share one across the calls whose
+    solves you want deduplicated (``search_until_converged`` and
+    ``sweep_backends`` do this automatically) and drop it to invalidate.
+    """
+
+    def __init__(self) -> None:
+        self._entries: dict[tuple, tuple[str, object]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses}
+
+    @staticmethod
+    def key(graph: TaskGraph, grid: SlotGrid, *, max_util: float,
+            same_slot: list[set[str]], seed: int, exact_threshold: int,
+            n_starts: int, time_limit_s: float) -> tuple:
+        return (_graph_signature(graph), _grid_signature(grid),
+                float(max_util),
+                frozenset(frozenset(g) for g in same_slot),
+                seed, exact_threshold, n_starts, float(time_limit_s))
+
+    def solve(self, graph: TaskGraph, grid: SlotGrid, *, max_util: float,
+              same_slot: list[set[str]], seed: int, exact_threshold: int,
+              n_starts: int, time_limit_s: float) -> Floorplan:
+        k = self.key(graph, grid, max_util=max_util, same_slot=same_slot,
+                     seed=seed, exact_threshold=exact_threshold,
+                     n_starts=n_starts, time_limit_s=time_limit_s)
+        hit = self._entries.get(k)
+        if hit is not None:
+            self.hits += 1
+            _FP_COUNTS["cache_hits"] += 1
+            kind, value = hit
+            if kind == "err":
+                raise InfeasibleError(value)
+            return dataclasses.replace(value, grid=grid)
+        self.misses += 1
+        _FP_COUNTS["solved"] += 1
+        try:
+            fp = floorplan(graph, grid, max_util=max_util,
+                           same_slot=same_slot, seed=seed,
+                           exact_threshold=exact_threshold,
+                           n_starts=n_starts, time_limit_s=time_limit_s)
+        except InfeasibleError as err:
+            self._entries[k] = ("err", str(err))
+            raise
+        self._entries[k] = ("ok", fp)
+        return fp
 
 
 @dataclasses.dataclass
@@ -87,21 +217,32 @@ def autobridge(graph: TaskGraph, grid: SlotGrid, *,
                time_limit_s: float = 6.0,
                row_weight: float = 1.0,
                col_weight: float = 1.0,
-               depth_scale: float = 1.0) -> Plan:
+               depth_scale: float = 1.0,
+               cache: FloorplanCache | None = None) -> Plan:
     # co-optimization knobs beyond max-util (joint design-space search,
     # §6.3 generalized): realized as a scaled working grid, so the whole
     # floorplan->pipeline->balance chain sees consistent weights/depths.
     grid = grid.with_knobs(row_weight=row_weight, col_weight=col_weight,
                            depth_scale=depth_scale)
+    util = grid.max_util if max_util is None else max_util
+
+    def _floorplan(groups: list[set[str]]) -> Floorplan:
+        if cache is not None:
+            return cache.solve(graph, grid, max_util=util,
+                               same_slot=groups, seed=seed,
+                               exact_threshold=exact_threshold,
+                               n_starts=n_starts, time_limit_s=time_limit_s)
+        _FP_COUNTS["solved"] += 1
+        return floorplan(graph, grid, max_util=util, same_slot=groups,
+                         seed=seed, exact_threshold=exact_threshold,
+                         n_starts=n_starts, time_limit_s=time_limit_s)
+
     co_located: list[set[str]] = [set(g) for g in same_slot]
     demoted: set[str] = set()      # streams demoted to control (last resort)
     pending_cycle: set[str] | None = None
     for round_ in range(max_feedback + 1):
         try:
-            fp = floorplan(graph, grid, max_util=max_util,
-                           same_slot=co_located, seed=seed,
-                           exact_threshold=exact_threshold,
-                           n_starts=n_starts, time_limit_s=time_limit_s)
+            fp = _floorplan(co_located)
         except InfeasibleError:
             if pending_cycle is None:
                 raise

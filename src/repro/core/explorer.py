@@ -42,17 +42,29 @@ vectorizes across the grids' heterogeneous candidate sets.
 ``explore_floorplans`` remains as a thin single-axis compatibility wrapper,
 and ``SearchSpace.refine`` zooms random sampling into the numeric
 neighborhood of a Pareto frontier for adaptive refinement.
+
+Converging search: numeric axes may be continuous ``Interval(lo, hi)``
+ranges instead of discrete value lists, and ``search_until_converged``
+closes the refine -> search loop automatically — every round re-anchors on
+the incumbent frontier, refines the space around it, and stops when the
+frontier's hypervolume improvement falls below ``tol``.  One unpipelined
+baseline simulation and one ``FloorplanCache`` (memoized ILP floorplans,
+``autobridge.floorplan_counts()``) are shared across all rounds, so
+revisited configurations cost a dict lookup instead of an ILP solve.
+
+See ``docs/search-guide.md`` for the end-to-end guide.
 """
 from __future__ import annotations
 
 import copy
 import dataclasses
 import itertools
+import math
 import random
 import time
 from typing import Callable, Mapping, Sequence
 
-from .autobridge import Plan, autobridge
+from .autobridge import FloorplanCache, Plan, autobridge
 from .balance import CycleError, balance_graph
 from .devicegrid import SlotGrid
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing
@@ -83,26 +95,101 @@ class SearchPoint:
 
 
 @dataclasses.dataclass(frozen=True)
-class SearchSpace:
-    """Axis values of the joint search.  ``grid_points`` enumerates the full
-    cartesian product; ``sample`` draws points without replacement (uniform
-    over the product) for spaces too big to sweep exhaustively."""
-    seeds: tuple[int, ...] = (0,)
-    utils: tuple[float, ...] = DEFAULT_UTILS
-    row_weights: tuple[float, ...] = (1.0,)
-    col_weights: tuple[float, ...] = (1.0,)
-    depth_scales: tuple[float, ...] = (1.0,)
+class Interval:
+    """A continuous numeric axis ``[lo, hi]`` for ``SearchSpace``.
+
+    Anywhere a ``SearchSpace`` axis accepts a tuple of discrete values it
+    also accepts an ``Interval``; sampling then draws uniformly from the
+    range via the seeded RNG, and ``refine`` *narrows* the range around the
+    Pareto frontier's values instead of halving a grid pitch.
+
+    >>> iv = Interval(0.6, 0.9)
+    >>> iv.lo, iv.hi, round(iv.span, 2)
+    (0.6, 0.9, 0.3)
+    >>> Interval(0.7, 0.7).span
+    0.0
+    """
+    lo: float
+    hi: float
+
+    def __post_init__(self):
+        if not (self.lo <= self.hi):
+            raise ValueError(f"Interval needs lo <= hi, got {self}")
 
     @property
-    def size(self) -> int:
+    def span(self) -> float:
+        return self.hi - self.lo
+
+    def clamp(self, v: float) -> float:
+        return min(max(v, self.lo), self.hi)
+
+
+def _is_interval(axis) -> bool:
+    return isinstance(axis, Interval)
+
+
+def _draw_axis(axis, rng: random.Random):
+    """One value from a discrete tuple (choice) or ``Interval`` (uniform)."""
+    if _is_interval(axis):
+        return rng.uniform(axis.lo, axis.hi)
+    return axis[rng.randrange(len(axis))]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Axis values of the joint search.
+
+    Each numeric axis (``utils``, ``row_weights``, ``col_weights``,
+    ``depth_scales``) is either a tuple of discrete values or a continuous
+    ``Interval(lo, hi)``; ``seeds`` is always discrete (it is categorical).
+    ``grid_points`` enumerates the full cartesian product of a fully
+    discrete space; ``sample`` draws points without replacement — uniform
+    over the product for discrete axes, uniform over the range for
+    continuous ones.
+
+    >>> space = SearchSpace(seeds=(0, 1), utils=(0.6, 0.7))
+    >>> space.size
+    4
+    >>> [(p.seed, p.max_util) for p in space.grid_points()]
+    [(0, 0.6), (0, 0.7), (1, 0.6), (1, 0.7)]
+    >>> cont = SearchSpace(utils=Interval(0.6, 0.9))
+    >>> cont.size
+    inf
+    >>> pts = cont.sample(4, seed=7)
+    >>> len(pts) == len(set(pts)) == 4
+    True
+    >>> all(0.6 <= p.max_util <= 0.9 for p in pts)
+    True
+    >>> pts == cont.sample(4, seed=7)      # seeded, fully deterministic
+    True
+    """
+    seeds: tuple[int, ...] = (0,)
+    utils: tuple[float, ...] | Interval = DEFAULT_UTILS
+    row_weights: tuple[float, ...] | Interval = (1.0,)
+    col_weights: tuple[float, ...] | Interval = (1.0,)
+    depth_scales: tuple[float, ...] | Interval = (1.0,)
+
+    def _axes(self) -> tuple:
+        return (self.seeds, self.utils, self.row_weights, self.col_weights,
+                self.depth_scales)
+
+    @property
+    def continuous(self) -> bool:
+        """True when any axis is an ``Interval`` (the space is infinite)."""
+        return any(_is_interval(ax) for ax in self._axes())
+
+    @property
+    def size(self) -> int | float:
+        """Number of grid points (``math.inf`` for continuous spaces)."""
+        if self.continuous:
+            return math.inf
         return (len(self.seeds) * len(self.utils) * len(self.row_weights)
                 * len(self.col_weights) * len(self.depth_scales))
 
     def _decode(self, idx: int) -> SearchPoint:
         """Mixed-radix decode of a flat product index (depth_scale fastest,
         seed slowest — matches ``itertools.product`` order)."""
-        axes = (self.seeds, self.utils, self.row_weights, self.col_weights,
-                self.depth_scales)
+        axes = self._axes()
         vals = []
         for ax in reversed(axes):
             idx, r = divmod(idx, len(ax))
@@ -112,6 +199,10 @@ class SearchSpace:
                            depth_scale=d)
 
     def grid_points(self) -> list[SearchPoint]:
+        if self.continuous:
+            raise ValueError(
+                "grid enumeration needs discrete axes; this space has "
+                "Interval axes — use sample()/refine() (random mode)")
         return [SearchPoint(seed=s, max_util=u, row_weight=rw, col_weight=cw,
                             depth_scale=d)
                 for s, u, rw, cw, d in itertools.product(
@@ -119,33 +210,56 @@ class SearchSpace:
                     self.col_weights, self.depth_scales)]
 
     def sample(self, n: int, *, seed: int = 0) -> list[SearchPoint]:
-        """``n`` distinct points drawn uniformly from the product (the whole
-        space, in grid order, when ``n >= size``)."""
-        if n >= self.size:
-            return self.grid_points()
+        """``n`` distinct points drawn uniformly from the space (the whole
+        grid, in grid order, when the space is discrete and ``n >= size``).
+
+        Continuous axes draw ``uniform(lo, hi)`` per point from the seeded
+        RNG, so samples are deterministic and almost surely distinct; the
+        draw loop retries collisions (possible when a continuous space also
+        has small discrete axes) a bounded number of times."""
+        if not self.continuous:
+            if n >= self.size:
+                return self.grid_points()
+            rng = random.Random(seed)
+            return [self._decode(i) for i in rng.sample(range(self.size), n)]
         rng = random.Random(seed)
-        return [self._decode(i) for i in rng.sample(range(self.size), n)]
+        pts: list[SearchPoint] = []
+        seen: set[SearchPoint] = set()
+        for _ in range(20 * n + 100):
+            if len(pts) >= n:
+                break
+            pt = SearchPoint(seed=_draw_axis(self.seeds, rng),
+                             max_util=_draw_axis(self.utils, rng),
+                             row_weight=_draw_axis(self.row_weights, rng),
+                             col_weight=_draw_axis(self.col_weights, rng),
+                             depth_scale=_draw_axis(self.depth_scales, rng))
+            if pt not in seen:
+                seen.add(pt)
+                pts.append(pt)
+        return pts
 
-    def refine(self, frontier: Sequence, n: int, *,
-               seed: int = 0) -> list[SearchPoint]:
-        """Adaptive refinement: ``n`` points sampled from the *neighborhood*
-        of the frontier's knob values (ROADMAP "zoom into the frontier").
+    def refined(self, frontier: Sequence) -> "SearchSpace":
+        """The zoomed space around a frontier's knob values.
 
-        ``frontier`` is a sequence of ``Candidate``s (or bare
-        ``SearchPoint``s).  Each numeric axis of the refined space keeps
-        the frontier's values plus the midpoints toward the adjacent
-        values of this space's axis — halving the grid pitch around every
-        winner; seeds are restricted to those the frontier used.  Sampling
-        reuses the ``sample`` plumbing (distinct, uniform, deterministic),
-        so ``refine`` composes with repeated zooming:
-        ``space.refine(res.frontier, 32)`` then search those points via
-        ``SearchSpace`` of the returned values, and so on."""
+        Each *discrete* numeric axis keeps the frontier's values plus the
+        midpoints toward the adjacent values of this space's axis — halving
+        the grid pitch around every winner.  Each *continuous*
+        (``Interval``) axis narrows to the frontier values' envelope padded
+        by a quarter of *this* space's span (clamped into it), so repeated
+        ``space = space.refined(frontier)`` shrinks the ranges
+        geometrically around the winners — ``search_until_converged``
+        compounds the zoom exactly this way.  Seeds are restricted to those
+        the frontier used.  An empty frontier returns the space unchanged."""
         pts = [getattr(c, "point", c) for c in frontier]
         pts = [p for p in pts if p is not None]
         if not pts:
-            return self.sample(n, seed=seed)
+            return self
 
-        def hood(axis: tuple, values: set) -> tuple:
+        def hood(axis, values: set):
+            if _is_interval(axis):
+                pad = axis.span / 4
+                return Interval(axis.clamp(min(values) - pad),
+                                axis.clamp(max(values) + pad))
             out = set(values)
             sv = sorted(set(axis) | set(values))
             for v in values:
@@ -156,14 +270,28 @@ class SearchSpace:
                     out.add((v + sv[i + 1]) / 2)
             return tuple(sorted(out))
 
-        refined = SearchSpace(
+        return SearchSpace(
             seeds=tuple(sorted({p.seed for p in pts})),
             utils=hood(self.utils, {p.max_util for p in pts}),
             row_weights=hood(self.row_weights, {p.row_weight for p in pts}),
             col_weights=hood(self.col_weights, {p.col_weight for p in pts}),
             depth_scales=hood(self.depth_scales,
                               {p.depth_scale for p in pts}))
-        return refined.sample(n, seed=seed)
+
+    def refine(self, frontier: Sequence, n: int, *,
+               seed: int = 0) -> list[SearchPoint]:
+        """Adaptive refinement: ``n`` points sampled from the *neighborhood*
+        of the frontier's knob values (ROADMAP "zoom into the frontier") —
+        ``self.refined(frontier).sample(n)``.  Sampling reuses the
+        ``sample`` plumbing (distinct, uniform, deterministic), so
+        ``refine`` composes with repeated zooming:
+        ``space.refine(res.frontier, 32)`` then search those points via
+        ``explore_design_space(points=...)``, and so on.  An empty frontier
+        degrades to plain sampling of this space."""
+        pts = [getattr(c, "point", c) for c in frontier]
+        if not any(p is not None for p in pts):
+            return self.sample(n, seed=seed)
+        return self.refined(frontier).sample(n, seed=seed)
 
 
 @dataclasses.dataclass
@@ -227,6 +355,13 @@ class Candidate:
 # Pareto pruning
 # ---------------------------------------------------------------------------
 
+def _objective(c: Candidate) -> tuple[float, float, float]:
+    """The maximized objective vector shared by ``pareto_frontier`` and the
+    hypervolume indicator: (fmax, -area overhead, -simulated cycles)."""
+    return (c.report.fmax_mhz, -c.plan.area_overhead,
+            -(c.sim.cycles if c.sim is not None else 0))
+
+
 def pareto_indices(vectors: Sequence[tuple]) -> list[int]:
     """Indices of non-dominated vectors; every objective is maximized.
 
@@ -254,9 +389,7 @@ def pareto_frontier(cands: Sequence[Candidate]) -> list[Candidate]:
     ok = [c for c in cands
           if c.plan is not None and c.report and c.report.routed
           and (c.sim is None or not c.sim.deadlocked)]
-    vecs = [(c.report.fmax_mhz, -c.plan.area_overhead,
-             -(c.sim.cycles if c.sim is not None else 0)) for c in ok]
-    return [ok[i] for i in pareto_indices(vecs)]
+    return [ok[i] for i in pareto_indices([_objective(c) for c in ok])]
 
 
 # ---------------------------------------------------------------------------
@@ -323,35 +456,48 @@ class DeferredSearch:
     ``simulate_batch`` call (mixed topologies vectorize through the padded
     backend).  ``sim_jobs`` exposes this search's slice of jobs,
     ``attach_sim`` distributes that call's results back onto the
-    candidates, and ``finish`` computes the Pareto frontier."""
+    candidates, and ``finish`` computes the Pareto frontier.
+
+    ``base_sim`` carries an already-simulated unpipelined baseline: when
+    set (``search_until_converged`` reuses round 1's baseline this way),
+    ``sim_jobs`` omits the baseline job and ``attach_sim`` stamps the
+    stored result onto every candidate instead."""
     graph: TaskGraph
     grid: SlotGrid
     model: PhysicalModel
     candidates: list[Candidate]
     space_size: int
+    base_sim: SimResult | None = None
 
     @property
     def feasible(self) -> list[Candidate]:
         return [c for c in self.candidates if c.plan is not None]
 
     def sim_jobs(self) -> list[SimJob]:
-        """The shared unpipelined baseline followed by one job per feasible
-        candidate (empty when there is nothing to simulate)."""
+        """The shared unpipelined baseline (omitted when ``base_sim`` is
+        already known) followed by one job per feasible candidate (empty
+        when there is nothing to simulate)."""
         feas = self.feasible
         if not feas:
             return []
-        return [SimJob(self.graph)] + [c.plan.sim_job() for c in feas]
+        jobs = [c.plan.sim_job() for c in feas]
+        if self.base_sim is None:
+            jobs.insert(0, SimJob(self.graph))
+        return jobs
 
     def attach_sim(self, results: Sequence[SimResult]) -> None:
         """Distribute ``simulate_batch`` results produced from
-        ``sim_jobs()`` (same order: baseline first)."""
+        ``sim_jobs()`` (same order: baseline first unless ``base_sim``
+        was supplied up front)."""
         feas = self.feasible
         if not feas:
             return
-        base_res = results[0]
-        for c, res in zip(feas, results[1:]):
+        if self.base_sim is None:
+            self.base_sim = results[0]
+            results = results[1:]
+        for c, res in zip(feas, results):
             c.sim = res
-            c.base_sim = base_res
+            c.base_sim = self.base_sim
 
     def finish(self, *, sim_calls: int = 0) -> SearchResult:
         return SearchResult(candidates=self.candidates,
@@ -411,16 +557,26 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
                          points: Sequence[SearchPoint] | None = None,
                          model: PhysicalModel = PhysicalModel(),
                          score: Callable[[Plan], TimingReport] | None = None,
+                         floorplan_cache: FloorplanCache | None = None,
+                         base_sim: SimResult | None = None,
                          **ab_kwargs) -> DeferredSearch:
     """Enumerate and physically score every search point, deferring the
     batched throughput simulation to the caller (see ``DeferredSearch``).
 
     mode    — "grid" sweeps the full cartesian product of ``space``;
-              "random" draws ``n_samples`` distinct points from it
+              "random" draws ``n_samples`` distinct points from it.  A
+              continuous space (``Interval`` axes) cannot be enumerated,
+              so "grid" silently degrades to "random" there.
     points  — explicit point list (e.g. from ``SearchSpace.refine``);
               overrides ``mode``
+    floorplan_cache — memoizes the ILP floorplan solves across calls
+              (refine rounds, device sweeps); see ``FloorplanCache``
+    base_sim — an already-simulated unpipelined baseline to reuse instead
+              of scheduling the baseline job again (``DeferredSearch``)
     """
     space = space or SearchSpace()
+    if mode == "grid" and space.continuous and points is None:
+        mode = "random"
     if points is not None:
         points = list(points)
     elif mode == "grid":
@@ -429,6 +585,8 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
         points = space.sample(n_samples, seed=sample_seed)
     else:
         raise ValueError(f"unknown mode {mode!r}")
+    if floorplan_cache is not None:
+        ab_kwargs = {**ab_kwargs, "cache": floorplan_cache}
 
     cands: list[Candidate] = []
     plans: dict[tuple, tuple[float, Plan | InfeasibleError]] = {}
@@ -495,7 +653,8 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
                                point=pt))
 
     return DeferredSearch(graph=graph, grid=grid, model=model,
-                          candidates=cands, space_size=len(points))
+                          candidates=cands, space_size=len(points),
+                          base_sim=base_sim)
 
 
 def _buffer_bits(plan: Plan, extra_capacity: dict[str, int]) -> dict[str, float]:
@@ -583,6 +742,22 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
                    the reclaimed bits are credited back into slot
                    utilization (``sized_report`` vs ``uniform_report``)
     ab_kwargs    — forwarded to ``autobridge`` (e.g. ``same_slot``)
+
+    >>> from repro.core import (SearchSpace, SlotGrid, TaskGraphBuilder,
+    ...                         explore_design_space)
+    >>> b = TaskGraphBuilder("chain")
+    >>> _ = b.stream("s0", width=64)
+    >>> _ = b.invoke("P", area={"LUT": 100}, outs=["s0"])
+    >>> _ = b.invoke("C", area={"LUT": 100}, ins=["s0"])
+    >>> grid = SlotGrid("g", rows=1, cols=2, base_capacity={"LUT": 150},
+    ...                 max_util=1.0)
+    >>> res = explore_design_space(b.build(), grid,
+    ...                            space=SearchSpace(utils=(0.9, 1.0)),
+    ...                            sim_firings=50)
+    >>> res.space_size, res.sim_calls
+    (2, 1)
+    >>> res.best.throughput_preserved
+    True
     """
     prep = prepare_design_space(graph, grid, space=space, mode=mode,
                                 n_samples=n_samples, sample_seed=sample_seed,
@@ -598,6 +773,218 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
     if fifo_sizing and res.frontier:
         _size_fifos(res, grid, model, fifo_firings or sim_firings or 200)
     return res
+
+
+# ---------------------------------------------------------------------------
+# converging search: refine -> search until the frontier stops moving
+# ---------------------------------------------------------------------------
+
+def hypervolume(vectors: Sequence[tuple], ref: Sequence[float]) -> float:
+    """Exact hypervolume of a maximized point set w.r.t. reference ``ref``.
+
+    The dominated volume between ``ref`` and the points — the standard
+    Pareto-frontier quality indicator ``search_until_converged`` watches.
+    Points are clipped to ``ref`` (a point at or below the reference on an
+    axis contributes zero extent there), so the indicator is monotone under
+    adding points.  Exact recursive slicing: fine for the tens-of-points
+    frontiers this search produces, any dimensionality.
+
+    >>> hypervolume([(2.0, 2.0)], (0.0, 0.0))
+    4.0
+    >>> hypervolume([(2.0, 1.0), (1.0, 2.0)], (0.0, 0.0))
+    3.0
+    >>> hypervolume([(2.0, 1.0), (1.0, 2.0), (1.5, 1.5)], (0.0, 0.0))
+    3.25
+    >>> hypervolume([], (0.0, 0.0))
+    0.0
+    """
+    ref = tuple(ref)
+    pts = [tuple(max(v, r) for v, r in zip(p, ref)) for p in vectors]
+    pts = [p for p in pts if any(v > r for v, r in zip(p, ref))]
+
+    def hv(points: list[tuple], r: tuple) -> float:
+        if not points:
+            return 0.0
+        if len(r) == 1:
+            return max(p[0] for p in points) - r[0]
+        # slice along the last axis, top slab first; each slab's area is the
+        # (d-1)-dim hypervolume of every point reaching that high or higher
+        points = sorted(points, key=lambda p: -p[-1])
+        vol = 0.0
+        for i, p in enumerate(points):
+            lo = points[i + 1][-1] if i + 1 < len(points) else r[-1]
+            thick = p[-1] - lo
+            if thick > 0:
+                vol += thick * hv([q[:-1] for q in points[:i + 1]], r[:-1])
+        return vol
+
+    return hv(pts, ref)
+
+
+@dataclasses.dataclass
+class ConvergedSearch:
+    """Result of ``search_until_converged``: per-round results, the merged
+    Pareto frontier over every evaluated point, and the hypervolume
+    trajectory that decided convergence."""
+    #: per-round ``SearchResult``s, in execution order
+    rounds: list[SearchResult]
+    #: Pareto frontier over the union of all rounds' candidates
+    frontier: list[Candidate]
+    #: merged-frontier hypervolume after each round (monotone by
+    #: construction: the merged frontier only ever gains points)
+    hypervolumes: list[float]
+    #: the fixed reference point the hypervolumes are measured against
+    #: (established from round 1's feasible candidates)
+    ref: tuple[float, float, float] | None
+    #: True when the relative hypervolume improvement fell below ``tol``
+    #: before the round budget ran out
+    converged: bool
+    #: total ``simulate_batch`` calls across all rounds (the baseline is
+    #: simulated once, in round 1, and reused)
+    sim_calls: int
+    #: total configurations evaluated (across rounds, anchors re-counted)
+    points_evaluated: int
+    #: the floorplan memoization shared by every round
+    cache: FloorplanCache
+
+    @property
+    def rounds_run(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def best(self) -> Candidate:
+        """Highest-fmax routable candidate on the merged frontier."""
+        return best_candidate(self.frontier)
+
+
+def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
+                           space: SearchSpace | None = None,
+                           rounds: int = 4,
+                           tol: float = 0.02,
+                           points_per_round: int = 24,
+                           sim_firings: int | None = 200,
+                           sample_seed: int = 0,
+                           initial_points: Sequence[SearchPoint] | None = None,
+                           model: PhysicalModel = PhysicalModel(),
+                           cache: FloorplanCache | None = None,
+                           **ab_kwargs) -> ConvergedSearch:
+    """Converging design-space search: iterate refine -> search until the
+    Pareto frontier's hypervolume stops improving.
+
+    Round 1 samples ``points_per_round`` configurations from ``space``
+    (continuous ``Interval`` axes draw uniformly; ``initial_points``, when
+    given, anchor the round — e.g. the discrete sweep a converged run must
+    never lose to).  Every later round re-anchors on the incumbent
+    frontier's points and *compounds* the zoom: the working space is
+    re-narrowed around the frontier each round (``SearchSpace.refined``:
+    discrete axes halve their grid pitch, continuous axes shrink their
+    range geometrically) and the round's draws come from that ever-tighter
+    space.  After each round the frontier is merged across *all* evaluated
+    candidates and its hypervolume w.r.t. a fixed reference point (set from
+    round 1) is appended to the trajectory; the loop stops when the
+    relative improvement falls below ``tol`` or ``rounds`` are exhausted.
+
+    Cost controls built in: the unpipelined baseline is simulated once, in
+    round 1, and reused by every later round (``DeferredSearch.base_sim``);
+    all rounds share one ``FloorplanCache``, so re-anchored frontier points
+    and revisited knob values skip the ILP solve entirely —
+    ``floorplan_counts()`` proves it (solves < points evaluated, hits > 0).
+
+    >>> from repro.core import (Interval, SearchSpace, SlotGrid,
+    ...                         TaskGraphBuilder, search_until_converged)
+    >>> b = TaskGraphBuilder("chain")
+    >>> _ = b.stream("s0", width=64)
+    >>> _ = b.invoke("P", area={"LUT": 100}, outs=["s0"])
+    >>> _ = b.invoke("C", area={"LUT": 100}, ins=["s0"])
+    >>> grid = SlotGrid("g", rows=1, cols=2, base_capacity={"LUT": 150},
+    ...                 max_util=1.0)
+    >>> res = search_until_converged(
+    ...     b.build(), grid, space=SearchSpace(utils=Interval(0.8, 1.0)),
+    ...     rounds=3, points_per_round=4, sim_firings=50)
+    >>> res.rounds_run <= 3 and len(res.frontier) >= 1
+    True
+    >>> res.hypervolumes == sorted(res.hypervolumes)   # monotone
+    True
+    >>> res.cache.hits > 0            # refine rounds reuse floorplans
+    True
+    """
+    space = space or SearchSpace()
+    cur_space = space
+    cache = cache or FloorplanCache()
+    pts: list[SearchPoint] = list(initial_points or ())
+    if len(pts) < points_per_round:
+        have = set(pts)
+        for p in space.sample(points_per_round, seed=sample_seed):
+            if len(pts) >= points_per_round:
+                break
+            if p not in have:
+                have.add(p)
+                pts.append(p)
+
+    results: list[SearchResult] = []
+    evaluated: list[Candidate] = []     # deduplicated by point
+    seen_pts: set[SearchPoint] = set()
+    hvs: list[float] = []
+    ref: tuple[float, float, float] | None = None
+    base_sim: SimResult | None = None
+    sim_calls = 0
+    points_evaluated = 0
+    converged = False
+    frontier: list[Candidate] = []
+
+    for r in range(max(rounds, 1)):
+        prep = prepare_design_space(graph, grid, points=pts, model=model,
+                                    floorplan_cache=cache,
+                                    base_sim=base_sim, **ab_kwargs)
+        round_calls = 0
+        if sim_firings:
+            jobs = prep.sim_jobs()
+            if jobs:
+                prep.attach_sim(simulate_batch(jobs, firings=sim_firings))
+                round_calls = 1
+        base_sim = prep.base_sim
+        sim_calls += round_calls
+        points_evaluated += prep.space_size
+        res = prep.finish(sim_calls=round_calls)
+        results.append(res)
+        for c in res.candidates:
+            if c.point is None or c.point not in seen_pts:
+                if c.point is not None:
+                    seen_pts.add(c.point)
+                evaluated.append(c)
+        frontier = pareto_frontier(evaluated)
+        if not frontier:
+            # nothing feasible yet: re-sample fresh points and try again
+            pts = cur_space.sample(points_per_round,
+                                   seed=sample_seed + r + 1)
+            continue
+        if ref is None:
+            vecs = [_objective(c) for c in evaluated if c.plan is not None
+                    and c.report and c.report.routed]
+            ref = tuple(min(v[i] for v in vecs) - 1.0 for i in range(3))
+        hvs.append(hypervolume([_objective(c) for c in frontier], ref))
+        if len(hvs) >= 2:
+            prev = hvs[-2]
+            if hvs[-1] - prev <= tol * max(abs(prev), 1e-12):
+                converged = True
+                break
+        if r + 1 < max(rounds, 1):
+            anchors = [c.point for c in frontier if c.point is not None]
+            # compound the zoom: narrow the working space around the
+            # incumbent frontier, then draw the round's points from it
+            cur_space = cur_space.refined(frontier)
+            fresh = cur_space.sample(points_per_round,
+                                     seed=sample_seed + 101 * (r + 1))
+            pts, have = [], set()
+            for p in anchors + fresh:
+                if p not in have:
+                    have.add(p)
+                    pts.append(p)
+
+    return ConvergedSearch(rounds=results, frontier=frontier,
+                           hypervolumes=hvs, ref=ref, converged=converged,
+                           sim_calls=sim_calls,
+                           points_evaluated=points_evaluated, cache=cache)
 
 
 # ---------------------------------------------------------------------------
@@ -659,6 +1046,7 @@ def sweep_backends(graph: TaskGraph,
                    sample_seed: int = 0,
                    model: PhysicalModel = PhysicalModel(),
                    sim_firings: int | None = 200,
+                   cache: FloorplanCache | None = None,
                    **ab_kwargs) -> BackendSweep:
     """One-call multi-device sweep: the same design searched across several
     device grids (U250/U280/TPU-pod shapes from ``repro.fpga.archs``), with
@@ -670,7 +1058,29 @@ def sweep_backends(graph: TaskGraph,
     ``grids`` is a name -> ``SlotGrid`` mapping, or a sequence of grids
     keyed by their ``.name`` (duplicates get a ``#2``-style suffix).
     Returns a ``BackendSweep``: per-grid ``SearchResult``s, ``best``
-    across grids, and a ``table()`` comparison summary.
+    across grids, and a ``table()`` comparison summary.  All grids share
+    one ``FloorplanCache`` (pass ``cache=`` to share it wider), so a grid
+    appearing twice — or a later converged search on the same grid — skips
+    its ILP solves.
+
+    >>> from repro.core import SearchSpace, SlotGrid, TaskGraphBuilder
+    >>> from repro.core import sweep_backends
+    >>> b = TaskGraphBuilder("chain")
+    >>> _ = b.stream("s0", width=64)
+    >>> _ = b.invoke("P", area={"LUT": 100}, outs=["s0"])
+    >>> _ = b.invoke("C", area={"LUT": 100}, ins=["s0"])
+    >>> small = SlotGrid("small", rows=1, cols=2,
+    ...                  base_capacity={"LUT": 150}, max_util=1.0)
+    >>> wide = SlotGrid("wide", rows=1, cols=4,
+    ...                  base_capacity={"LUT": 300}, max_util=1.0)
+    >>> sweep = sweep_backends(b.build(), {"small": small, "wide": wide},
+    ...                        space=SearchSpace(utils=(0.9, 1.0)),
+    ...                        sim_firings=50)
+    >>> sorted(sweep.results), sweep.sim_calls
+    (['small', 'wide'], 1)
+    >>> name, champ = sweep.best
+    >>> champ.plan is not None
+    True
     """
     if isinstance(grids, Mapping):
         named = dict(grids)
@@ -686,9 +1096,11 @@ def sweep_backends(graph: TaskGraph,
     if not named:
         raise ValueError("sweep_backends needs at least one device grid")
 
+    cache = cache or FloorplanCache()
     preps = {name: prepare_design_space(graph, g, space=space, mode=mode,
                                         n_samples=n_samples,
                                         sample_seed=sample_seed, model=model,
+                                        floorplan_cache=cache,
                                         **ab_kwargs)
              for name, g in named.items()}
     sim_calls = 0

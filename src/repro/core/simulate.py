@@ -429,9 +429,32 @@ def _topology_signature(graph: TaskGraph):
                   for s in graph.streams))
 
 
+#: default ``simulate_batch`` byte budget for the padded array state —
+#: generous enough that every in-repo suite stays a single array-sweep
+#: (the CI gate depends on that), small enough that a thousand-design
+#: batch cannot OOM the host on its (V, S*, H) push-history ring.
+DEFAULT_MAX_BYTES = 1 << 30
+
+
+def _job_bytes_estimate(jobs: Sequence[SimJob]) -> int:
+    """Upper-bound bytes of padded per-job array state.
+
+    Dominated by the (V, S*, H) cumulative-push ring; the remaining
+    (V, S*)/(V, T*) int64/bool state is folded in as a few extra columns.
+    Uses raw graph task/stream counts (>= the engine's post-filter counts)
+    and the batch-max latency, so the estimate never undershoots."""
+    t_max = max(len(j.graph.tasks) for j in jobs)
+    s_max = max(len(j.graph.streams) for j in jobs)
+    h = 2 + max((max(j.latency.values(), default=0) if j.latency else 0)
+                for j in jobs)
+    return 8 * (s_max * (h + 6) + 5 * t_max)
+
+
 def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
                    max_cycles: int | None = None,
-                   backend: str = "auto") -> list[SimResult]:
+                   backend: str = "auto",
+                   max_bytes: int | None = DEFAULT_MAX_BYTES
+                   ) -> list[SimResult]:
     """Simulate many (graph, latency, capacity, II) variants.
 
     ``jobs`` is a sequence of ``SimJob`` (bare ``TaskGraph``s are promoted
@@ -450,11 +473,35 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
               "numpy": force the array engine (works for any mix of
               topologies; raises only when NumPy itself is missing).
               "event": force per-job event simulation.
+    max_bytes — byte budget for the padded array state (default 1 GiB,
+              ``None`` = unlimited).  When the batch's padded allocation
+              would exceed it, the batch is split into successive
+              contiguous array-sweeps ("chunks") that each fit; results
+              are identical to the unchunked run, and each chunk counts
+              one ``numpy`` engine invocation in ``engine_counts()`` —
+              i.e. the counters report the chunk count.
 
     The common cases: a fixed-topology floorplan sweep is one group (no
     padding waste); a cross-design benchmark table or a multi-device
     ``sweep_backends`` comparison is a handful of groups covered by one
     (V, T*, S*) sweep instead of V Python-level event runs.
+
+    >>> from repro.core import SimJob, TaskGraphBuilder, simulate_batch
+    >>> b = TaskGraphBuilder("pc")
+    >>> _ = b.stream("s", width=32, depth=2)
+    >>> _ = b.invoke("P", area={}, outs=["s"])
+    >>> _ = b.invoke("C", area={}, ins=["s"])
+    >>> g = b.build()
+    >>> plain, slow = simulate_batch(
+    ...     [SimJob(g), SimJob(g, ii={"C": 2})], firings=10)
+    >>> (plain.fired["C"], slow.fired["C"], plain.deadlocked)
+    (10, 10, False)
+    >>> slow.cycles > plain.cycles          # II=2 consumer takes longer
+    True
+    >>> chunked = simulate_batch([SimJob(g), SimJob(g, ii={"C": 2})],
+    ...                          firings=10, max_bytes=1)   # one job/chunk
+    >>> [r.cycles for r in chunked] == [plain.cycles, slow.cycles]
+    True
     """
     max_cycles = max_cycles or firings * 64 + 10_000
     norm: list[SimJob] = [j if isinstance(j, SimJob) else SimJob(j)
@@ -472,7 +519,17 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
                          extra_capacity=j.extra_capacity, ii=j.ii,
                          max_cycles=max_cycles, engine="event")
                 for j in norm]
-    return _simulate_batch_numpy(norm, firings=firings, max_cycles=max_cycles)
+    chunk = len(norm)
+    if max_bytes is not None:
+        chunk = max(1, min(chunk, int(max_bytes // _job_bytes_estimate(norm))))
+    if chunk >= len(norm):
+        return _simulate_batch_numpy(norm, firings=firings,
+                                     max_cycles=max_cycles)
+    out: list[SimResult] = []
+    for i in range(0, len(norm), chunk):
+        out.extend(_simulate_batch_numpy(norm[i:i + chunk], firings=firings,
+                                         max_cycles=max_cycles))
+    return out
 
 
 class _Group:

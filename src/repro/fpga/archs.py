@@ -114,11 +114,25 @@ DEVICE_GRIDS = {
     "tpu_pod_4x2": tpu_pod_grid,
     "tpu_pod_2x2": lambda max_util=0.70: tpu_pod_grid(
         rows=2, cols=2, max_util=max_util),
+    "tpu_pod_8x4": lambda max_util=0.70: tpu_pod_grid(
+        rows=8, cols=4, max_util=max_util),
 }
 
 
 def grid_for(name: str, **kwargs) -> SlotGrid:
-    """Instantiate a registered device grid by name."""
+    """Instantiate a registered device grid by name.
+
+    Grid factories are cheap and stateless; the expensive per-grid work (the
+    floorplan ILPs of a sweep) is memoized by ``repro.core.FloorplanCache``,
+    keyed by the grid's shape/capacities/boundary weights — so two calls
+    producing equal grids share cached floorplans automatically.
+
+    >>> from repro.fpga import grid_for
+    >>> grid_for("u250").rows, grid_for("u250").cols
+    (4, 2)
+    >>> grid_for("tpu_pod_8x4", max_util=0.8).name
+    'TPUpod8x4'
+    """
     try:
         factory = DEVICE_GRIDS[name]
     except KeyError:

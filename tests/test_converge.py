@@ -1,0 +1,437 @@
+"""Converging search, continuous axes, floorplan memoization and batch
+chunking (the PR-4 tentpole).
+
+Covers: ``Interval`` axes (sampling determinism, refine narrowing), the
+hypervolume indicator, ``search_until_converged`` (early stop on a
+saturated space, monotone hypervolume trajectory, shared baseline
+simulation, never worse than a single-round search), ``FloorplanCache``
+(identical plans to a cold solve — property-tested over randomized graphs
+— plus infeasibility caching and cross-object hits), ``simulate_batch``
+byte-budget chunking, and the converge-aware CI regression gate.
+"""
+
+import importlib
+import importlib.util
+import json
+import math
+import os
+import random
+
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    FloorplanCache,
+    Interval,
+    SearchPoint,
+    SearchSpace,
+    SimJob,
+    TaskGraphBuilder,
+    SlotGrid,
+    autobridge,
+    engine_counts,
+    explore_design_space,
+    floorplan_counts,
+    hypervolume,
+    pareto_frontier,
+    reset_engine_counts,
+    reset_floorplan_counts,
+    search_until_converged,
+    simulate_batch,
+)
+from repro.core.explorer import _objective
+from repro.core.ilp import InfeasibleError
+from repro.fpga import u280_grid
+
+
+# ---------------------------------------------------------------------------
+# Interval axes
+# ---------------------------------------------------------------------------
+
+
+def test_interval_validates_and_spans():
+    iv = Interval(0.6, 0.9)
+    assert iv.span == pytest.approx(0.3)
+    assert iv.clamp(0.1) == 0.6 and iv.clamp(1.5) == 0.9
+    assert Interval(0.7, 0.7).span == 0.0
+    with pytest.raises(ValueError):
+        Interval(0.9, 0.6)
+
+
+def test_continuous_space_sampling_is_deterministic_and_in_range():
+    space = SearchSpace(seeds=(0, 1), utils=Interval(0.6, 0.9),
+                        depth_scales=(1.0, 2.0))
+    assert space.continuous
+    assert space.size == math.inf
+    pts = space.sample(16, seed=3)
+    assert len(pts) == len(set(pts)) == 16
+    for p in pts:
+        assert 0.6 <= p.max_util <= 0.9
+        assert p.seed in (0, 1) and p.depth_scale in (1.0, 2.0)
+    assert pts == space.sample(16, seed=3)
+    assert pts != space.sample(16, seed=4)
+    with pytest.raises(ValueError):
+        space.grid_points()
+
+
+def test_discrete_space_behavior_unchanged():
+    space = SearchSpace(seeds=(0, 1), utils=(0.6, 0.7))
+    assert not space.continuous
+    assert space.size == 4
+    assert space.sample(10) == space.grid_points()
+
+
+def test_refine_narrows_intervals_around_frontier():
+    space = SearchSpace(utils=Interval(0.5, 1.0), row_weights=(1.0, 2.0))
+    frontier = [SearchPoint(max_util=0.75, row_weight=2.0)]
+    pts = space.refine(frontier, 30, seed=5)
+    assert pts
+    # quarter-span padding around a single winner: [0.625, 0.875]
+    for p in pts:
+        assert 0.625 - 1e-9 <= p.max_util <= 0.875 + 1e-9
+        assert p.row_weight in (1.5, 2.0)  # discrete axis: midpoint halving
+    # refinement never escapes the original range, even near an edge
+    edge = [SearchPoint(max_util=0.98)]
+    for p in space.refine(edge, 20, seed=6):
+        assert 0.5 <= p.max_util <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# hypervolume
+# ---------------------------------------------------------------------------
+
+
+def test_hypervolume_known_values():
+    assert hypervolume([(2.0, 2.0)], (0.0, 0.0)) == pytest.approx(4.0)
+    assert hypervolume([(2.0, 1.0), (1.0, 2.0)], (0.0, 0.0)) == pytest.approx(3.0)
+    assert hypervolume([(2.0, 1.0), (1.0, 2.0), (1.5, 1.5)],
+                       (0.0, 0.0)) == pytest.approx(3.25)
+    assert hypervolume([], (0.0, 0.0)) == 0.0
+    # 3D: unit cube plus a disjoint sliver
+    assert hypervolume([(1, 1, 1), (2, 1, 0.5)], (0, 0, 0)) == pytest.approx(1.5)
+
+
+def test_hypervolume_dominated_and_clipped_points_add_nothing():
+    base = hypervolume([(2.0, 2.0)], (0.0, 0.0))
+    assert hypervolume([(2.0, 2.0), (1.0, 1.0)], (0.0, 0.0)) == base
+    assert hypervolume([(2.0, 2.0), (-5.0, 9.0)], (0.0, 0.0)) == base
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.0, 4.0), min_size=2, max_size=6),
+       st.floats(0.0, 4.0), st.floats(0.0, 4.0))
+def test_hypervolume_monotone_under_adding_points(coords, x, y):
+    pts = [(coords[i], coords[i + 1]) for i in range(len(coords) - 1)]
+    before = hypervolume(pts, (0.0, 0.0))
+    after = hypervolume(pts + [(x, y)], (0.0, 0.0))
+    assert after >= before - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# search_until_converged
+# ---------------------------------------------------------------------------
+
+
+def _chain_graph(widths=(64, 64, 64)):
+    b = TaskGraphBuilder("chain")
+    for i, w in enumerate(widths):
+        b.stream(f"s{i}", width=w)
+    n = len(widths) + 1
+    for i in range(n):
+        b.invoke(f"K{i}", area={"LUT": 100},
+                 ins=[f"s{i - 1}"] if i > 0 else [],
+                 outs=[f"s{i}"] if i < n - 1 else [])
+    return b.build()
+
+
+def _small_grid():
+    return SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 150},
+                    max_util=1.0)
+
+
+def _vecadd():
+    pe = 4
+    b = TaskGraphBuilder("VecAdd")
+    a = b.streams("str_a", n=pe, width=512)
+    bb = b.streams("str_b", n=pe, width=512)
+    c = b.streams("str_c", n=pe, width=512)
+    b.invoke("LoadA", area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+             outs=a, count=pe)
+    b.invoke("LoadB", area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+             outs=bb, count=pe)
+    b.invoke("Add", area={"LUT": 60e3, "DSP": 256}, ins=a + bb, outs=c,
+             count=pe)
+    b.invoke("Store", area={"LUT": 12e3, "hbm_channels": 1}, ins=c, count=pe)
+    return b.build()
+
+
+def test_converged_search_stops_early_on_saturated_space():
+    """A space whose frontier saturates in round 1 must converge (and stop)
+    at round 2, not burn the whole round budget."""
+    res = search_until_converged(
+        _chain_graph(), _small_grid(),
+        space=SearchSpace(utils=Interval(0.9, 1.0)),
+        rounds=6, points_per_round=4, sim_firings=50, tol=0.02)
+    assert res.converged
+    assert res.rounds_run == 2 < 6
+    assert len(res.hypervolumes) == 2
+    assert res.hypervolumes[0] == pytest.approx(res.hypervolumes[1])
+
+
+def test_converged_search_hypervolume_never_regresses():
+    res = search_until_converged(
+        _vecadd(), u280_grid(),
+        space=SearchSpace(utils=Interval(0.6, 0.9),
+                          depth_scales=(1.0, 2.0)),
+        rounds=3, points_per_round=8, sim_firings=60, tol=0.0)
+    assert res.hypervolumes == sorted(res.hypervolumes)
+    assert res.frontier and pareto_frontier(res.frontier) == res.frontier
+    # the merged frontier dedups re-anchored points: one candidate per point
+    pts = [c.point for c in res.frontier]
+    assert len(pts) == len(set(pts))
+
+
+def test_converged_search_reuses_one_baseline_simulation():
+    reset_engine_counts()
+    res = search_until_converged(
+        _vecadd(), u280_grid(),
+        space=SearchSpace(utils=Interval(0.6, 0.9)),
+        rounds=3, points_per_round=6, sim_firings=50, tol=0.0)
+    assert res.rounds_run >= 2
+    base_ids = {id(c.base_sim) for c in res.frontier if c.base_sim}
+    assert len(base_ids) == 1  # every round shares round 1's baseline
+    # jobs across all batch calls: one baseline total, not one per round
+    counts = engine_counts()
+    assert counts["cycle"] == 0
+    assert res.sim_calls == res.rounds_run
+
+
+def test_converged_search_beats_single_round_and_proves_cache_hits():
+    """The acceptance criterion: on the quickstart design the converged
+    frontier's hypervolume is >= the single-round frontier's, with
+    floorplan_counts() showing strictly fewer ILP solves than points
+    evaluated and cache hits > 0."""
+    graph = _vecadd()
+    grid = u280_grid()
+    space = SearchSpace(seeds=(0,), utils=(0.6, 0.7, 0.8),
+                        depth_scales=(1.0, 2.0))
+    single = explore_design_space(graph, grid, space=space, sim_firings=60)
+
+    reset_floorplan_counts()
+    conv = search_until_converged(
+        graph, grid,
+        space=SearchSpace(seeds=(0,), utils=Interval(0.6, 0.8),
+                          depth_scales=(1.0, 2.0)),
+        rounds=3, points_per_round=8, sim_firings=60,
+        initial_points=space.grid_points())
+    counts = floorplan_counts()
+
+    # common reference point below both frontiers
+    vecs_s = [_objective(c) for c in single.frontier]
+    vecs_c = [_objective(c) for c in conv.frontier]
+    ref = tuple(min(v[i] for v in vecs_s + vecs_c) - 1.0 for i in range(3))
+    assert hypervolume(vecs_c, ref) >= hypervolume(vecs_s, ref) - 1e-9
+
+    assert counts["cache_hits"] > 0
+    assert counts["solved"] < conv.points_evaluated
+    assert conv.best.fmax >= single.best.fmax
+
+
+# ---------------------------------------------------------------------------
+# FloorplanCache
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(3, 6), st.integers(0, 2))
+def test_floorplan_cache_returns_identical_plans_to_cold_solve(n, seed):
+    """Property: for randomized graphs, a cache-hitting autobridge run is
+    indistinguishable from a cold one — same placement, cost and depths —
+    even across distinct-but-equal graph objects."""
+    rng = random.Random(10_007 * n + seed)
+    widths = tuple(rng.choice((32, 64, 128)) for _ in range(n - 1))
+
+    def build():
+        return _chain_graph(widths)
+
+    grid = SlotGrid("g", rows=2, cols=2,
+                    base_capacity={"LUT": 100.0 * n}, max_util=1.0)
+    cache = FloorplanCache()
+    cold = autobridge(build(), grid, seed=seed)
+    warm1 = autobridge(build(), grid, seed=seed, cache=cache)
+    warm2 = autobridge(build(), grid, seed=seed, cache=cache)
+    assert cache.hits >= 1  # warm2 hit warm1's entry (equal, distinct graph)
+    for plan in (warm1, warm2):
+        assert plan.floorplan.placement == cold.floorplan.placement
+        assert plan.floorplan.cost == pytest.approx(cold.floorplan.cost)
+        assert plan.depth == cold.depth
+        assert plan.area_overhead == pytest.approx(cold.area_overhead)
+
+
+def test_floorplan_cache_key_separates_knobs():
+    cache = FloorplanCache()
+    g = _chain_graph()
+    grid = _small_grid()
+    autobridge(g, grid, seed=0, cache=cache)
+    autobridge(g, grid, seed=0, cache=cache)           # hit
+    autobridge(g, grid, seed=1, cache=cache)           # new seed -> miss
+    autobridge(g, grid, seed=0, max_util=0.9, cache=cache)  # new util -> miss
+    # depth_scale does NOT key the floorplan: same entry, new working grid
+    plan = autobridge(g, grid, seed=0, depth_scale=2.0, cache=cache)
+    assert cache.hits == 2 and cache.misses == 3
+    assert plan.floorplan.grid.row_boundaries[0].pipeline_depth == 4
+
+
+def test_floorplan_cache_caches_infeasibility():
+    cache = FloorplanCache()
+    g = _chain_graph()
+    tiny = SlotGrid("tiny", rows=1, cols=2, base_capacity={"LUT": 10},
+                    max_util=1.0)
+    for _ in range(2):
+        with pytest.raises(InfeasibleError):
+            autobridge(g, tiny, cache=cache)
+    assert cache.misses == 1 and cache.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# simulate_batch byte-budget chunking
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_batch_chunking_matches_unchunked():
+    g1 = _chain_graph()
+    g2 = _vecadd()
+    jobs = [SimJob(g1), SimJob(g1, ii={"K0": 3}), SimJob(g2),
+            SimJob(g2, latency={"str_a[0]": 2},
+                   extra_capacity={"str_a[0]": 4})]
+    reset_engine_counts()
+    full = simulate_batch(jobs, firings=40)
+    assert engine_counts()["numpy"] == 1
+    reset_engine_counts()
+    chunked = simulate_batch(jobs, firings=40, max_bytes=1)  # 1 job/chunk
+    # engine counters report the chunk count
+    assert engine_counts()["numpy"] == len(jobs)
+    assert engine_counts()["event"] == 0
+    for a, b in zip(full, chunked):
+        assert (a.cycles, a.fired, a.deadlocked) == (b.cycles, b.fired,
+                                                     b.deadlocked)
+    # an intermediate budget splits into fewer, larger chunks
+    sim_mod = importlib.import_module("repro.core.simulate")
+    reset_engine_counts()
+    two = simulate_batch(jobs, firings=40,
+                         max_bytes=2 * sim_mod._job_bytes_estimate(jobs))
+    assert 1 < engine_counts()["numpy"] <= len(jobs)
+    assert [r.cycles for r in two] == [r.cycles for r in full]
+
+
+def test_simulate_batch_default_budget_keeps_one_sweep():
+    g = _chain_graph()
+    reset_engine_counts()
+    simulate_batch([SimJob(g) for _ in range(20)], firings=30)
+    assert engine_counts()["numpy"] == 1
+
+
+# ---------------------------------------------------------------------------
+# converge-aware regression gate
+# ---------------------------------------------------------------------------
+
+
+def _load_check_regression():
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "benchmarks",
+        "check_regression.py",
+    )
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _converged_doc(opt_avg, *, hits, solved, points):
+    return {
+        "suite": "fmax_suite",
+        "converge": True,
+        "rows": [{"name": "d", "board": "u280", "opt_mhz": opt_avg}],
+        "summary": {
+            "opt_avg_mhz": opt_avg,
+            "sim_deadlocks": 0,
+            "throughput_violations": 0,
+        },
+        "sim": {
+            "mode": "converged",
+            "counts": {"event": 2, "cycle": 0, "numpy": 6},
+            "floorplan": {"solved": solved, "cache_hits": hits,
+                          "ilp_bipartitions": 3 * solved},
+            "points_evaluated": points,
+        },
+    }
+
+
+def test_check_regression_converged_gate(tmp_path):
+    cr = _load_check_regression()
+
+    def write(name, doc):
+        p = tmp_path / name
+        p.write_text(json.dumps(doc))
+        return str(p)
+
+    base = write("base.json", {
+        "suite": "fmax_suite",
+        "rows": [{"name": "d", "board": "u280", "opt_mhz": 300.0}],
+        "summary": {"opt_avg_mhz": 300.0, "sim_deadlocks": 0,
+                    "throughput_violations": 0},
+    })
+    ok = write("ok.json", _converged_doc(305.0, hits=10, solved=20, points=40))
+    assert cr.main([ok, base]) == 0
+    # no cache hits -> memoization silently dead -> fail
+    cold = write("cold.json",
+                 _converged_doc(305.0, hits=0, solved=40, points=40))
+    assert cr.main([cold, base]) == 1
+    # one solve per point -> fail even with hits recorded elsewhere
+    full = write("full.json",
+                 _converged_doc(305.0, hits=3, solved=40, points=40))
+    assert cr.main([full, base]) == 1
+    # fmax regression still gates converged runs
+    slow = write("slow.json",
+                 _converged_doc(200.0, hits=10, solved=20, points=40))
+    assert cr.main([slow, base]) == 1
+    # a cycle-engine fallback fails; extra event runs (1-job rounds) do not
+    doc = _converged_doc(305.0, hits=10, solved=20, points=40)
+    doc["sim"]["counts"]["cycle"] = 1
+    bad = write("cyc.json", doc)
+    assert cr.main([bad, base]) == 1
+    # the padded array backend must have run at least once: a run whose
+    # every round degraded to per-job event simulation fails
+    doc = _converged_doc(305.0, hits=10, solved=20, points=40)
+    doc["sim"]["counts"] = {"event": 24, "cycle": 0, "numpy": 0}
+    noarr = write("noarr.json", doc)
+    assert cr.main([noarr, base]) == 1
+
+
+def _load_check_links():
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "docs", "check_links.py")
+    spec = importlib.util.spec_from_file_location("check_links", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_link_checker_resolves_and_fails_correctly(tmp_path):
+    cl = _load_check_links()
+    a = tmp_path / "a.md"
+    b = tmp_path / "b.md"
+    b.write_text("# Real Heading\n\nbody\n")
+    a.write_text("[ok](b.md) [anchor](b.md#real-heading) [self](#my-title)\n"
+                 "# My Title\n")
+    assert cl.main([str(a)]) == 0
+    a.write_text("[broken](missing.md) [bad](b.md#nope)\n")
+    assert cl.main([str(a)]) == 1
+    # repo docs stay green (the CI docs job runs exactly this)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = [os.path.join(root, "README.md"),
+             os.path.join(root, "docs", "architecture.md"),
+             os.path.join(root, "docs", "search-guide.md")]
+    assert cl.main(files) == 0

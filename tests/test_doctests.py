@@ -1,0 +1,26 @@
+"""Tier-1 doctest gate for the public API surface.
+
+The module docstrings of the explorer and simulator (plus the device-grid
+registry) carry runnable ``>>>`` examples — the same ones the CI ``docs``
+job executes via ``pytest --doctest-modules``.  Running them here too makes
+the examples part of tier-1, so they cannot rot between doc builds: a
+signature change that breaks an example breaks ``pytest -x -q``.
+"""
+
+import doctest
+import importlib
+
+import pytest
+
+# NB: resolved via importlib, not attribute access — ``repro.core.simulate``
+# the *module* is shadowed by ``repro.core.simulate`` the *function* once
+# the package __init__ runs its re-exports.
+MODULES = ("repro.core.explorer", "repro.core.simulate", "repro.fpga.archs")
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_public_api_doctests(name):
+    mod = importlib.import_module(name)
+    results = doctest.testmod(mod, verbose=False)
+    assert results.attempted > 0, f"{name} lost its >>> examples"
+    assert results.failed == 0
