@@ -18,6 +18,14 @@ regress beyond tolerance:
   one-array-sweep rule is waived (each refine round is its own batch), but
   the padded array backend must have run at least once and a per-job
   cycle-engine fallback still fails.
+* fmax suite, parallel converged runs (BOTH JSONs carry ``"converge":
+  true`` — CI passes the ``--jobs 2`` run as *current* and the fresh
+  sequential converged run as *baseline*): the worker pool's contract is
+  bit-identical results, so every per-design row must match the sequential
+  run EXACTLY (fmax, util, frontier size, hypervolume, rounds,
+  points evaluated — no tolerance), and the ``sim.pool`` block must record
+  the worker/merge counters (jobs >= 2, merged == dispatched) proving the
+  solves really ran in subprocesses and were merged back.
 * throughput suite: per-design TAPA cycle counts must not grow more than
   ``--tol`` relative to baseline; every baseline design must still be
   present; the vectorization gate always applies (the throughput suite is
@@ -110,6 +118,67 @@ def check_converged_sim(cur: dict, *, label: str) -> list[str]:
     return errors
 
 
+#: converged-row fields the parallel run must reproduce bit-identically
+PARALLEL_IDENTITY_FIELDS = (
+    "opt_mhz",
+    "util",
+    "frontier",
+    "hypervolume",
+    "rounds_run",
+    "points_evaluated",
+    "cycles_opt",
+    "cycles_base",
+)
+
+
+def check_parallel_frontier(cur: dict, base: dict) -> list[str]:
+    """The ``--jobs N`` gate: a parallel converged run vs the sequential
+    converged run it must reproduce.
+
+    The worker pool only relocates deterministic ILP solves, so any row
+    difference — however small — means the parallel path diverged from the
+    sequential one and the bit-identity contract is broken; no tolerance
+    applies.  The ``sim.pool`` counters must additionally prove work
+    actually went through the pool and every worker result was merged
+    back."""
+    errors = []
+    pool = cur.get("sim", {}).get("pool")
+    if not pool:
+        errors.append("parallel run's sim block records no pool counters")
+    else:
+        if pool.get("jobs", 1) < 2:
+            errors.append(
+                f"parallel run recorded jobs={pool.get('jobs', 1)} "
+                f"(expected >= 2)"
+            )
+        if pool.get("merged", 0) != pool.get("dispatched", 0):
+            errors.append(
+                f"pool merged {pool.get('merged', 0)} of "
+                f"{pool.get('dispatched', 0)} dispatched worker results"
+            )
+        if pool.get("dispatched", 0) and not pool.get("worker_solves", 0):
+            errors.append(
+                "pool dispatched work but recorded no worker-side solves"
+            )
+    cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
+    for r in base["rows"]:
+        key = (r["name"], r["board"])
+        got = cur_rows.get(key)
+        if got is None:
+            errors.append(f"design {key} missing from parallel run")
+            continue
+        for field in PARALLEL_IDENTITY_FIELDS:
+            if field not in r and field not in got:
+                continue
+            if got.get(field) != r.get(field):
+                errors.append(
+                    f"{key} {field} diverged under --jobs: sequential "
+                    f"{r.get(field)!r} vs parallel {got.get(field)!r} "
+                    f"(bit-identity contract broken)"
+                )
+    return errors
+
+
 def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
     errors = []
     cs, bs = cur["summary"], base["summary"]
@@ -125,7 +194,11 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
         errors.append(
             f"{cs['throughput_violations']} design(s) lost steady-state throughput"
         )
-    if cur.get("converge"):
+    if cur.get("converge") and base.get("converge"):
+        # parallel-vs-sequential converged comparison: exact identity
+        errors += check_converged_sim(cur, label="converged run")
+        errors += check_parallel_frontier(cur, base)
+    elif cur.get("converge"):
         errors += check_converged_sim(cur, label="converged run")
     elif cur.get("subset"):
         errors += check_sim(cur, label="fast subset")

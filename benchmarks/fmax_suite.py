@@ -29,9 +29,19 @@ memoization fired (cache hits > 0, solves < points).  Because the anchors
 are exactly the default path's sweep, a converged run's frontier can never
 score below the non-converged baseline JSON it is gated against.
 
+``--jobs N`` fans each round's cold ILP solves over the
+``repro.search.pool`` worker pool: results are bit-identical to ``--jobs
+1`` (the CI gate compares a ``--jobs 2`` run's rows against the fresh
+sequential converged JSON and requires exact frontier identity), the
+search wall time drops with cores, and the ``sim.pool`` block records the
+worker dispatch/merge counters plus the parent-side merged floorplan
+counts.  ``--proposer surrogate`` switches the round proposals to the
+response-surface model (``repro.search.surrogate``).
+
 CLI:
     python benchmarks/fmax_suite.py [--subset fast|full] [--json PATH]
                                     [--firings N] [--no-sim] [--converge]
+                                    [--jobs N] [--proposer uniform|surrogate]
 """
 from __future__ import annotations
 
@@ -46,6 +56,7 @@ from repro.core import (FloorplanCache, InfeasibleError, Interval,
                         reset_floorplan_counts, search_until_converged,
                         timed_pool_simulations)
 from repro.fpga import benchmarks as B, grid_for
+from repro.search import pool_counts, reset_pool_counts
 
 UTIL_SWEEP = (0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.0)
 
@@ -143,9 +154,12 @@ def finish(entry: dict, sim_firings: int | None) -> dict:
 
 
 def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
-                  cache: FloorplanCache) -> dict:
+                  cache: FloorplanCache, jobs: int = 1,
+                  proposer: str = "uniform") -> dict:
     """One design through ``search_until_converged``: continuous util range
-    anchored on the discrete UTIL_SWEEP grid, shared floorplan cache."""
+    anchored on the discrete UTIL_SWEEP grid, shared floorplan cache.
+    ``jobs`` fans the cold ILP solves over the worker pool (bit-identical
+    rows, less wall time); ``proposer`` selects the round-proposal model."""
     grid = grid_for(board)
     base_pl = packed_placement(graph, grid)
     base = analyze_timing(graph, grid, base_pl)
@@ -155,7 +169,8 @@ def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
         graph, grid,
         space=SearchSpace(utils=Interval(UTIL_SWEEP[0], UTIL_SWEEP[-1])),
         rounds=CONVERGE_ROUNDS, points_per_round=CONVERGE_POINTS,
-        sim_firings=sim_firings, initial_points=anchors, cache=cache)
+        sim_firings=sim_firings, initial_points=anchors, cache=cache,
+        jobs=jobs, proposer=proposer)
     row = assemble_row(name, board, graph, grid, base_pl, base, res,
                        wall=time.monotonic() - t0, sim_firings=sim_firings)
     row.update({
@@ -163,6 +178,7 @@ def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
         "converged": res.converged,
         "points_evaluated": res.points_evaluated,
         "hypervolume": res.hypervolumes[-1] if res.hypervolumes else 0.0,
+        "proposer": res.proposer,
     })
     return row
 
@@ -234,12 +250,18 @@ def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
 def main_converged(verbose: bool = True,
                    sim_firings: int | None = DEFAULT_FIRINGS,
                    subset: tuple[str, ...] | None = None,
-                   json_path: str | None = None) -> list[dict]:
+                   json_path: str | None = None,
+                   jobs: int = 1,
+                   proposer: str = "uniform") -> list[dict]:
     """The ``--converge`` path: per-design ``search_until_converged`` with a
     suite-wide ``FloorplanCache``; the JSON ``sim`` block carries the
-    floorplan solve/cache-hit counters the CI gate checks."""
+    floorplan solve/cache-hit counters the CI gate checks, plus the
+    ``pool`` worker dispatch/merge counters when ``jobs > 1`` (the
+    parallel-run gate requires them and exact row identity vs the
+    sequential run)."""
     reset_engine_counts()
     reset_floorplan_counts()
+    reset_pool_counts()
     cache = FloorplanCache()
     t0 = time.monotonic()
     rows = []
@@ -247,7 +269,7 @@ def main_converged(verbose: bool = True,
         if subset is not None and name not in subset:
             continue
         r = run_converged(name, board, graph, sim_firings=sim_firings,
-                          cache=cache)
+                          cache=cache, jobs=jobs, proposer=proposer)
         rows.append(r)
         if verbose:
             base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
@@ -257,9 +279,11 @@ def main_converged(verbose: bool = True,
                   f"rounds={r['rounds_run']} converged={r['converged']} "
                   f"points={r['points_evaluated']}")
     fp = floorplan_counts()
+    pool = {"jobs": jobs, **pool_counts()}
     sim_meta = {"firings": sim_firings, "mode": "converged",
                 "counts": engine_counts(), "floorplan": fp,
-                "cache": cache.stats(),
+                "cache": cache.stats(), "pool": pool,
+                "proposer": proposer,
                 "points_evaluated": sum(r["points_evaluated"] for r in rows),
                 "wall_s": time.monotonic() - t0}
     s = summarize(rows)
@@ -270,6 +294,10 @@ def main_converged(verbose: bool = True,
           f"cache_hits={fp['cache_hits']} "
           f"ilp_bipartitions={fp['ilp_bipartitions']} "
           f"points={sim_meta['points_evaluated']}")
+    print(f"fmax_suite,POOL,0,jobs={jobs} "
+          f"dispatched={pool['dispatched']} merged={pool['merged']} "
+          f"worker_solves={pool['worker_solves']} "
+          f"search_wall={sim_meta['wall_s']:.2f}s")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "fmax_suite", "converge": True,
@@ -295,8 +323,19 @@ if __name__ == "__main__":
                     help="run search_until_converged per design (continuous "
                          "util range, memoized floorplans, cache stats in "
                          "the JSON sim block)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for the converged search's cold "
+                         "ILP floorplan solves (1 = sequential; results "
+                         "are bit-identical either way)")
+    ap.add_argument("--proposer", choices=("uniform", "surrogate"),
+                    default="uniform",
+                    help="converged-search round-proposal strategy")
     args = ap.parse_args()
-    driver = main_converged if args.converge else main
-    driver(sim_firings=None if args.no_sim else (args.firings or None),
-           subset=FAST_SUBSET if args.subset == "fast" else None,
-           json_path=args.json_path)
+    sim = None if args.no_sim else (args.firings or None)
+    subset = FAST_SUBSET if args.subset == "fast" else None
+    if args.converge:
+        main_converged(sim_firings=sim, subset=subset,
+                       json_path=args.json_path, jobs=args.jobs,
+                       proposer=args.proposer)
+    else:
+        main(sim_firings=sim, subset=subset, json_path=args.json_path)

@@ -9,12 +9,16 @@ throughput-scored in batched simulator calls and Pareto-pruned.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (Interval, SearchSpace, TaskGraphBuilder,
-                        analyze_timing, autobridge, explore_design_space,
+import multiprocessing
+
+from repro.core import (TaskGraphBuilder, analyze_timing, autobridge,
                         floorplan_counts, packed_placement,
-                        reset_floorplan_counts, search_until_converged,
-                        sweep_backends)
+                        reset_floorplan_counts)
 from repro.fpga import tpu_pod_grid, u250_grid, u280_grid
+# repro.search is the search subsystem's public entry point (repro.core
+# re-exports these names too, for backward compatibility)
+from repro.search import (Interval, SearchSpace, explore_design_space,
+                          search_until_converged, sweep_backends)
 
 # --- VecAdd from the paper's Listing 1: 4 PEs, Load/Add/Store each -------
 PE = 4
@@ -65,26 +69,37 @@ print(f"best: {best.fmax:.0f} MHz at util={best.point.max_util} "
       f"(throughput preserved: {best.throughput_preserved}, "
       f"FIFO bits saved by profile-driven sizing: {best.fifo_savings_bits:.0f})")
 
-# converging search: continuous knob ranges instead of value lists, and the
-# refine -> search loop closed automatically — each round re-anchors on the
-# incumbent Pareto frontier and narrows the ranges around it, stopping when
-# the frontier's hypervolume stops improving.  The baseline simulation runs
-# once (round 1) and every round shares one FloorplanCache, so re-anchored
-# configurations skip the ILP solve — floorplan_counts() proves it.
+# converging search, in parallel: continuous knob ranges instead of value
+# lists, and the refine -> search loop closed automatically — each round
+# re-anchors on the incumbent Pareto frontier and narrows the ranges around
+# it, stopping when the frontier's hypervolume stops improving.  The
+# baseline simulation runs once (round 1) and every round shares one
+# FloorplanCache, so re-anchored configurations skip the ILP solve —
+# floorplan_counts() proves it.  jobs=2 fans each round's COLD solves over
+# a process pool (repro.search.pool): workers ship their caches and counter
+# deltas back, the round replays against the merged cache, and the frontier
+# is bit-identical to a sequential run — only the ILP wall time shrinks.
 reset_floorplan_counts()
+# this script has no __main__ guard, so only fork-capable platforms may use
+# worker processes (spawn would re-execute the whole script per worker);
+# jobs=1 is the exact same search, just sequential.
+jobs = 2 if "fork" in multiprocessing.get_all_start_methods() else 1
 conv = search_until_converged(
     graph, grid,
     space=SearchSpace(seeds=(0, 1), utils=Interval(0.6, 0.9),
                       row_weights=Interval(1.0, 2.0),
                       depth_scales=(1.0, 2.0)),
-    rounds=4, tol=0.02, points_per_round=16, sim_firings=200)
+    rounds=4, tol=0.02, points_per_round=16, sim_firings=200, jobs=jobs)
 fc = floorplan_counts()
 print(f"converged search: {conv.rounds_run} rounds "
       f"({'converged' if conv.converged else 'budget exhausted'}), "
       f"{conv.points_evaluated} points, frontier {len(conv.frontier)}, "
       f"hypervolume {' -> '.join(f'{h:.3g}' for h in conv.hypervolumes)}")
+pool_note = (f"{conv.pool.worker_solves} solved by {conv.pool.jobs} pool "
+             f"workers, {conv.pool.merged}/{conv.pool.dispatched} merged"
+             if conv.pool else "sequential solve path")
 print(f"floorplans: {fc['solved']} solved, {fc['cache_hits']} cache hits "
-      f"({fc['ilp_bipartitions']} ILP bipartitions total)")
+      f"({fc['ilp_bipartitions']} ILP bipartitions total; {pool_note})")
 cbest = conv.best
 print(f"converged best: {cbest.fmax:.0f} MHz at "
       f"util={cbest.point.max_util:.3f} (>= single-round best: "

@@ -1,20 +1,20 @@
 """repro.core — the paper's contribution: task-parallel dataflow graphs,
 coarse-grained floorplanning co-optimized with compilation, throughput-safe
-latency balancing, and HBM/channel binding."""
+latency balancing, and HBM/channel binding.
+
+The design-space search names (``explore_design_space``,
+``search_until_converged``, ``SearchSpace``, ...) now live in
+``repro.search`` and are re-exported here lazily (PEP 562): the search
+package imports this package's submodules, so an eager import would be
+circular.  ``from repro.core import explore_design_space`` keeps working
+exactly as before."""
 from .autobridge import (FloorplanCache, Plan, autobridge, floorplan_counts,
+                         initial_floorplan_key, merge_floorplan_counts,
                          reset_floorplan_counts)
 from .balance import BalanceResult, CycleError, balance_graph, balance_latencies
 from .devicegrid import Boundary, SlotGrid
 from .floorplan import Floorplan, floorplan
 from .graph import Stream, Task, TaskGraph, TaskGraphBuilder
-from .explorer import (BackendSweep, Candidate, ConvergedSearch,
-                       DeferredSearch, Interval, SearchPoint,
-                       SearchResult, SearchSpace, best_candidate,
-                       explore_design_space, explore_floorplans,
-                       hypervolume, pareto_frontier, pareto_indices,
-                       pool_simulations, prepare_design_space,
-                       search_until_converged, sweep_backends,
-                       timed_pool_simulations)
 from .fmax_model import PhysicalModel, TimingReport, analyze_timing, packed_placement
 from .ilp import InfeasibleError
 from .pipelining import PipelineAssignment, assign_pipelining
@@ -22,21 +22,38 @@ from .simulate import (SimJob, SimResult, StreamProfile, engine_counts,
                        pipeline_headroom, reset_engine_counts, simulate,
                        simulate_batch)
 
+#: names re-exported from ``repro.search`` (resolved lazily via
+#: ``__getattr__`` below to break the core <-> search import cycle)
+_SEARCH_EXPORTS = (
+    "BackendSweep", "Candidate", "ConvergedSearch", "DeferredSearch",
+    "Interval", "SearchPoint", "SearchResult", "SearchSpace",
+    "best_candidate", "explore_design_space", "explore_floorplans",
+    "hypervolume", "pareto_frontier", "pareto_indices", "pool_simulations",
+    "prepare_design_space", "search_until_converged", "sweep_backends",
+    "timed_pool_simulations",
+)
+
 __all__ = [
     "FloorplanCache", "Plan", "autobridge", "floorplan_counts",
+    "initial_floorplan_key", "merge_floorplan_counts",
     "reset_floorplan_counts",
     "BalanceResult", "CycleError", "balance_graph",
     "balance_latencies", "Boundary", "SlotGrid", "Floorplan", "floorplan",
     "Stream", "Task", "TaskGraph", "TaskGraphBuilder", "InfeasibleError",
     "PipelineAssignment", "assign_pipelining",
-    "BackendSweep", "Candidate", "ConvergedSearch", "DeferredSearch",
-    "best_candidate", "explore_floorplans", "pool_simulations",
-    "prepare_design_space", "search_until_converged", "sweep_backends",
-    "timed_pool_simulations",
-    "Interval", "SearchPoint", "SearchResult", "SearchSpace",
-    "explore_design_space", "hypervolume",
-    "pareto_frontier", "pareto_indices",
     "PhysicalModel", "TimingReport", "analyze_timing", "packed_placement",
     "SimJob", "SimResult", "StreamProfile", "engine_counts",
     "pipeline_headroom", "reset_engine_counts", "simulate", "simulate_batch",
+    *_SEARCH_EXPORTS,
 ]
+
+
+def __getattr__(name: str):
+    if name in _SEARCH_EXPORTS:
+        import repro.search as _search
+        return getattr(_search, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SEARCH_EXPORTS))

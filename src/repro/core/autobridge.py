@@ -37,7 +37,8 @@ from .balance import BalanceResult, CycleError, balance_graph
 from .devicegrid import SlotGrid
 from .floorplan import Floorplan, floorplan
 from .graph import TaskGraph
-from .ilp import InfeasibleError, reset_solve_counts, solve_counts
+from .ilp import (InfeasibleError, merge_solve_counts, reset_solve_counts,
+                  solve_counts)
 from .pipelining import PipelineAssignment, assign_pipelining
 from .simulate import SimJob, SimResult, simulate_batch
 
@@ -64,6 +65,22 @@ def floorplan_counts() -> dict[str, int]:
     out = dict(_FP_COUNTS)
     out["ilp_bipartitions"] = solve_counts()["bipartitions"]
     return out
+
+
+def merge_floorplan_counts(delta: dict[str, int]) -> None:
+    """Fold a worker process's counter deltas into this process's globals.
+
+    The solve/cache-hit counters are module globals and therefore
+    per-process: a ``floorplan()`` run inside a ``ProcessPoolExecutor``
+    worker increments the *worker's* copy and the parent would silently
+    read 0.  The worker pool (``repro.search.pool``) snapshots
+    ``floorplan_counts()`` before and after each task and ships the
+    difference back; merging it here keeps ``floorplan_counts()`` —
+    and every benchmark/CI gate built on it — correct regardless of
+    where the solve actually ran."""
+    _FP_COUNTS["solved"] += int(delta.get("solved", 0))
+    _FP_COUNTS["cache_hits"] += int(delta.get("cache_hits", 0))
+    merge_solve_counts(delta.get("ilp_bipartitions", 0))
 
 
 def _graph_signature(graph: TaskGraph) -> tuple:
@@ -115,9 +132,30 @@ class FloorplanCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
     def stats(self) -> dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,
                 "misses": self.misses}
+
+    def merge(self, other: "FloorplanCache") -> int:
+        """Adopt ``other``'s entries (a worker's cache shipped back from a
+        subprocess); returns the number of entries actually added.
+
+        First writer wins on key conflicts — harmless, because
+        ``floorplan()`` is deterministic, so two caches can only ever hold
+        *identical* values under the same key (property-tested against
+        interleaved single-process solves).  ``hits``/``misses`` are NOT
+        merged: they describe each object's own lookup history, and the
+        global solve counters are merged separately via
+        ``merge_floorplan_counts``."""
+        added = 0
+        for k, v in other._entries.items():
+            if k not in self._entries:
+                self._entries[k] = v
+                added += 1
+        return added
 
     @staticmethod
     def key(graph: TaskGraph, grid: SlotGrid, *, max_util: float,
@@ -154,6 +192,32 @@ class FloorplanCache:
             raise
         self._entries[k] = ("ok", fp)
         return fp
+
+
+def initial_floorplan_key(graph: TaskGraph, grid: SlotGrid, *,
+                          max_util: float | None = None,
+                          same_slot: list[set[str]] = (),
+                          seed: int = 0,
+                          exact_threshold: int = 22,
+                          n_starts: int = 8,
+                          time_limit_s: float = 6.0,
+                          row_weight: float = 1.0,
+                          col_weight: float = 1.0,
+                          depth_scale: float = 1.0,
+                          **_ignored) -> tuple:
+    """The ``FloorplanCache`` key of ``autobridge``'s FIRST floorplan solve
+    under these knobs (cycle-feedback rounds may add further keys, but a
+    full run populates those too).  The worker pool uses this to skip
+    dispatching points whose solve chain a previous run already cached.
+    Defaults mirror ``autobridge``'s; unrelated kwargs are ignored so the
+    explorer can forward its ``ab_kwargs`` verbatim."""
+    grid = grid.with_knobs(row_weight=row_weight, col_weight=col_weight,
+                           depth_scale=depth_scale)
+    util = grid.max_util if max_util is None else max_util
+    return FloorplanCache.key(graph, grid, max_util=util,
+                              same_slot=[set(g) for g in same_slot],
+                              seed=seed, exact_threshold=exact_threshold,
+                              n_starts=n_starts, time_limit_s=time_limit_s)
 
 
 @dataclasses.dataclass

@@ -1,1144 +1,16 @@
-"""Batched design-space search over co-optimization knobs (paper §6.3++).
+"""Backward-compatibility alias: the design-space search moved to
+``repro.search`` (PR 5's first-class search subsystem).
 
-The paper's multi-floorplan methodology "implements all candidates in
-parallel and keeps the best", sweeping the per-slot max-utilization knob.
-This module generalizes that single axis into a *joint* search space:
-
-    seed x max_util x row/col boundary weight x pipeline depth scale
-
-``SearchSpace`` enumerates joint configurations (full grid or random
-sampling); ``explore_design_space`` runs the floorplan -> pipeline ->
-balance co-optimization per point, scores every feasible candidate with the
-physical model, checks all candidates' throughput in a handful of
-``simulate_batch`` calls (the candidates share the design's topology, so
-hundreds of variants vectorize into one NumPy sweep), and prunes the result
-to the Pareto frontier over (fmax, area overhead, simulated cycles).
-
-Two structural facts keep the search cheap:
-
-  * the floorplan ILP is invariant to ``depth_scale`` (register depth never
-    appears in the partitioning objective), so depth variants of one
-    (seed, util, weights) cell reuse the expensive floorplan and only re-run
-    pipelining + balancing;
-  * throughput evaluation is batched: one ``simulate_batch`` call scores the
-    shared unpipelined baseline plus every feasible candidate.
-
-With ``fifo_sizing=True`` frontier candidates are additionally profiled by
-the event engine (per-stream occupancy histograms from the push/pop logs)
-and their FIFO headroom re-sized to the *observed* peak occupancy instead
-of the uniform ``2*latency`` round-trip term — trimming to the observed
-peak provably preserves the simulated schedule, so the verification batch
-must reproduce the same cycle count.  The reclaimed bits are then credited
-back into the fmax surrogate: ``sized_report`` scores the design with its
-real (smaller) buffering footprint charged into slot utilization.
-
-Deferred scoring and multi-device sweeps: ``prepare_design_space`` returns
-a ``DeferredSearch`` whose simulation jobs a caller can pool across many
-searches; ``sweep_backends`` uses this to compare one design across several
-device grids (U250/U280/TPU-pod shapes) with ALL grids' candidates scored
-in a single ``simulate_batch`` call — the padded ragged-batch backend
-vectorizes across the grids' heterogeneous candidate sets.
-
-``explore_floorplans`` remains as a thin single-axis compatibility wrapper,
-and ``SearchSpace.refine`` zooms random sampling into the numeric
-neighborhood of a Pareto frontier for adaptive refinement.
-
-Converging search: numeric axes may be continuous ``Interval(lo, hi)``
-ranges instead of discrete value lists, and ``search_until_converged``
-closes the refine -> search loop automatically — every round re-anchors on
-the incumbent frontier, refines the space around it, and stops when the
-frontier's hypervolume improvement falls below ``tol``.  One unpipelined
-baseline simulation and one ``FloorplanCache`` (memoized ILP floorplans,
-``autobridge.floorplan_counts()``) are shared across all rounds, so
-revisited configurations cost a dict lookup instead of an ILP solve.
-
-See ``docs/search-guide.md`` for the end-to-end guide.
+``repro.core.explorer`` *is* ``repro.search.engine`` — this module replaces
+itself in ``sys.modules`` with the engine module, so every historical use
+keeps working unchanged: ``from repro.core.explorer import
+explore_design_space``, reaching into internals (``_objective``), and even
+monkeypatching module attributes (``explorer_mod.simulate_batch``) all hit
+the real engine.  New code should import from ``repro.search`` directly;
+see ``docs/search-guide.md``.
 """
-from __future__ import annotations
+import sys
 
-import copy
-import dataclasses
-import itertools
-import math
-import random
-import time
-from typing import Callable, Mapping, Sequence
+from repro.search import engine as _engine
 
-from .autobridge import FloorplanCache, Plan, autobridge
-from .balance import CycleError, balance_graph
-from .devicegrid import SlotGrid
-from .fmax_model import PhysicalModel, TimingReport, analyze_timing
-from .graph import TaskGraph
-from .ilp import InfeasibleError
-from .pipelining import assign_pipelining
-from .simulate import (SimJob, SimResult, StreamProfile, engine_counts,
-                       reset_engine_counts, simulate, simulate_batch)
-
-#: the paper's §6.3 max-util sweep (Table 10)
-DEFAULT_UTILS = (0.55, 0.60, 0.65, 0.70, 0.75, 0.80, 0.85)
-
-
-@dataclasses.dataclass(frozen=True)
-class SearchPoint:
-    """One joint knob configuration."""
-    seed: int = 0
-    max_util: float = 0.70
-    row_weight: float = 1.0
-    col_weight: float = 1.0
-    depth_scale: float = 1.0
-
-    @property
-    def floorplan_key(self) -> tuple:
-        """Axes the floorplan depends on.  ``depth_scale`` only affects
-        pipelining/balancing, so depth variants share one floorplan."""
-        return (self.seed, self.max_util, self.row_weight, self.col_weight)
-
-
-@dataclasses.dataclass(frozen=True)
-class Interval:
-    """A continuous numeric axis ``[lo, hi]`` for ``SearchSpace``.
-
-    Anywhere a ``SearchSpace`` axis accepts a tuple of discrete values it
-    also accepts an ``Interval``; sampling then draws uniformly from the
-    range via the seeded RNG, and ``refine`` *narrows* the range around the
-    Pareto frontier's values instead of halving a grid pitch.
-
-    >>> iv = Interval(0.6, 0.9)
-    >>> iv.lo, iv.hi, round(iv.span, 2)
-    (0.6, 0.9, 0.3)
-    >>> Interval(0.7, 0.7).span
-    0.0
-    """
-    lo: float
-    hi: float
-
-    def __post_init__(self):
-        if not (self.lo <= self.hi):
-            raise ValueError(f"Interval needs lo <= hi, got {self}")
-
-    @property
-    def span(self) -> float:
-        return self.hi - self.lo
-
-    def clamp(self, v: float) -> float:
-        return min(max(v, self.lo), self.hi)
-
-
-def _is_interval(axis) -> bool:
-    return isinstance(axis, Interval)
-
-
-def _draw_axis(axis, rng: random.Random):
-    """One value from a discrete tuple (choice) or ``Interval`` (uniform)."""
-    if _is_interval(axis):
-        return rng.uniform(axis.lo, axis.hi)
-    return axis[rng.randrange(len(axis))]
-
-
-@dataclasses.dataclass(frozen=True)
-class SearchSpace:
-    """Axis values of the joint search.
-
-    Each numeric axis (``utils``, ``row_weights``, ``col_weights``,
-    ``depth_scales``) is either a tuple of discrete values or a continuous
-    ``Interval(lo, hi)``; ``seeds`` is always discrete (it is categorical).
-    ``grid_points`` enumerates the full cartesian product of a fully
-    discrete space; ``sample`` draws points without replacement — uniform
-    over the product for discrete axes, uniform over the range for
-    continuous ones.
-
-    >>> space = SearchSpace(seeds=(0, 1), utils=(0.6, 0.7))
-    >>> space.size
-    4
-    >>> [(p.seed, p.max_util) for p in space.grid_points()]
-    [(0, 0.6), (0, 0.7), (1, 0.6), (1, 0.7)]
-    >>> cont = SearchSpace(utils=Interval(0.6, 0.9))
-    >>> cont.size
-    inf
-    >>> pts = cont.sample(4, seed=7)
-    >>> len(pts) == len(set(pts)) == 4
-    True
-    >>> all(0.6 <= p.max_util <= 0.9 for p in pts)
-    True
-    >>> pts == cont.sample(4, seed=7)      # seeded, fully deterministic
-    True
-    """
-    seeds: tuple[int, ...] = (0,)
-    utils: tuple[float, ...] | Interval = DEFAULT_UTILS
-    row_weights: tuple[float, ...] | Interval = (1.0,)
-    col_weights: tuple[float, ...] | Interval = (1.0,)
-    depth_scales: tuple[float, ...] | Interval = (1.0,)
-
-    def _axes(self) -> tuple:
-        return (self.seeds, self.utils, self.row_weights, self.col_weights,
-                self.depth_scales)
-
-    @property
-    def continuous(self) -> bool:
-        """True when any axis is an ``Interval`` (the space is infinite)."""
-        return any(_is_interval(ax) for ax in self._axes())
-
-    @property
-    def size(self) -> int | float:
-        """Number of grid points (``math.inf`` for continuous spaces)."""
-        if self.continuous:
-            return math.inf
-        return (len(self.seeds) * len(self.utils) * len(self.row_weights)
-                * len(self.col_weights) * len(self.depth_scales))
-
-    def _decode(self, idx: int) -> SearchPoint:
-        """Mixed-radix decode of a flat product index (depth_scale fastest,
-        seed slowest — matches ``itertools.product`` order)."""
-        axes = self._axes()
-        vals = []
-        for ax in reversed(axes):
-            idx, r = divmod(idx, len(ax))
-            vals.append(ax[r])
-        d, c, w, u, s = vals
-        return SearchPoint(seed=s, max_util=u, row_weight=w, col_weight=c,
-                           depth_scale=d)
-
-    def grid_points(self) -> list[SearchPoint]:
-        if self.continuous:
-            raise ValueError(
-                "grid enumeration needs discrete axes; this space has "
-                "Interval axes — use sample()/refine() (random mode)")
-        return [SearchPoint(seed=s, max_util=u, row_weight=rw, col_weight=cw,
-                            depth_scale=d)
-                for s, u, rw, cw, d in itertools.product(
-                    self.seeds, self.utils, self.row_weights,
-                    self.col_weights, self.depth_scales)]
-
-    def sample(self, n: int, *, seed: int = 0) -> list[SearchPoint]:
-        """``n`` distinct points drawn uniformly from the space (the whole
-        grid, in grid order, when the space is discrete and ``n >= size``).
-
-        Continuous axes draw ``uniform(lo, hi)`` per point from the seeded
-        RNG, so samples are deterministic and almost surely distinct; the
-        draw loop retries collisions (possible when a continuous space also
-        has small discrete axes) a bounded number of times."""
-        if not self.continuous:
-            if n >= self.size:
-                return self.grid_points()
-            rng = random.Random(seed)
-            return [self._decode(i) for i in rng.sample(range(self.size), n)]
-        rng = random.Random(seed)
-        pts: list[SearchPoint] = []
-        seen: set[SearchPoint] = set()
-        for _ in range(20 * n + 100):
-            if len(pts) >= n:
-                break
-            pt = SearchPoint(seed=_draw_axis(self.seeds, rng),
-                             max_util=_draw_axis(self.utils, rng),
-                             row_weight=_draw_axis(self.row_weights, rng),
-                             col_weight=_draw_axis(self.col_weights, rng),
-                             depth_scale=_draw_axis(self.depth_scales, rng))
-            if pt not in seen:
-                seen.add(pt)
-                pts.append(pt)
-        return pts
-
-    def refined(self, frontier: Sequence) -> "SearchSpace":
-        """The zoomed space around a frontier's knob values.
-
-        Each *discrete* numeric axis keeps the frontier's values plus the
-        midpoints toward the adjacent values of this space's axis — halving
-        the grid pitch around every winner.  Each *continuous*
-        (``Interval``) axis narrows to the frontier values' envelope padded
-        by a quarter of *this* space's span (clamped into it), so repeated
-        ``space = space.refined(frontier)`` shrinks the ranges
-        geometrically around the winners — ``search_until_converged``
-        compounds the zoom exactly this way.  Seeds are restricted to those
-        the frontier used.  An empty frontier returns the space unchanged."""
-        pts = [getattr(c, "point", c) for c in frontier]
-        pts = [p for p in pts if p is not None]
-        if not pts:
-            return self
-
-        def hood(axis, values: set):
-            if _is_interval(axis):
-                pad = axis.span / 4
-                return Interval(axis.clamp(min(values) - pad),
-                                axis.clamp(max(values) + pad))
-            out = set(values)
-            sv = sorted(set(axis) | set(values))
-            for v in values:
-                i = sv.index(v)
-                if i > 0:
-                    out.add((v + sv[i - 1]) / 2)
-                if i + 1 < len(sv):
-                    out.add((v + sv[i + 1]) / 2)
-            return tuple(sorted(out))
-
-        return SearchSpace(
-            seeds=tuple(sorted({p.seed for p in pts})),
-            utils=hood(self.utils, {p.max_util for p in pts}),
-            row_weights=hood(self.row_weights, {p.row_weight for p in pts}),
-            col_weights=hood(self.col_weights, {p.col_weight for p in pts}),
-            depth_scales=hood(self.depth_scales,
-                              {p.depth_scale for p in pts}))
-
-    def refine(self, frontier: Sequence, n: int, *,
-               seed: int = 0) -> list[SearchPoint]:
-        """Adaptive refinement: ``n`` points sampled from the *neighborhood*
-        of the frontier's knob values (ROADMAP "zoom into the frontier") —
-        ``self.refined(frontier).sample(n)``.  Sampling reuses the
-        ``sample`` plumbing (distinct, uniform, deterministic), so
-        ``refine`` composes with repeated zooming:
-        ``space.refine(res.frontier, 32)`` then search those points via
-        ``explore_design_space(points=...)``, and so on.  An empty frontier
-        degrades to plain sampling of this space."""
-        pts = [getattr(c, "point", c) for c in frontier]
-        if not any(p is not None for p in pts):
-            return self.sample(n, seed=seed)
-        return self.refined(frontier).sample(n, seed=seed)
-
-
-@dataclasses.dataclass
-class Candidate:
-    max_util: float
-    plan: Plan | None
-    report: TimingReport | None
-    error: str | None = None
-    #: dataflow-simulated cycles of the pipelined+balanced design (filled by
-    #: the batched throughput evaluation; None when not requested/feasible)
-    sim: SimResult | None = None
-    #: cycles of the unpipelined baseline design (shared across candidates)
-    base_sim: SimResult | None = None
-    #: the joint knob configuration that produced this candidate
-    point: SearchPoint | None = None
-    #: event-engine occupancy profiles (``fifo_sizing``, frontier only)
-    profile: dict[str, StreamProfile] | None = None
-    #: per-stream FIFO headroom re-sized to observed peak occupancy
-    #: (reverted to None if the verification batch saw different cycles)
-    sized_capacity: dict[str, int] | None = None
-    #: verified run of the re-sized design — cycle-identical to the
-    #: uniform-headroom reference at the same firing count, or None if the
-    #: sizing was reverted
-    sized_sim: SimResult | None = None
-    #: timing of the sized design with its (smaller) buffering footprint
-    #: charged into slot utilization (``analyze_timing(buffer_bits=...)``) —
-    #: reclaimed BRAM/LUT credited back, so never below ``uniform_report``
-    sized_report: TimingReport | None = None
-    #: the uniform-headroom twin scored under the same buffering charge
-    #: (the comparison anchor for the FIFO-sizing credit)
-    uniform_report: TimingReport | None = None
-
-    @property
-    def fmax(self) -> float:
-        return self.report.fmax_mhz if self.report else 0.0
-
-    @property
-    def throughput_preserved(self) -> bool | None:
-        """True iff the simulated candidate kept the baseline's steady-state
-        throughput (only fill/drain skew added).  None when not simulated."""
-        if self.sim is None or self.base_sim is None or self.plan is None:
-            return None
-        if self.sim.deadlocked:
-            return False
-        skew = sum(self.plan.depth.values()) + self.plan.graph.num_tasks
-        return self.sim.cycles <= self.base_sim.cycles + skew
-
-    @property
-    def fifo_savings_bits(self) -> float | None:
-        """Width-weighted capacity saved by profile-driven sizing vs the
-        uniform ``2*latency`` headroom (None until sized)."""
-        if self.sized_capacity is None or self.plan is None:
-            return None
-        width = {s.name: s.width for s in self.plan.graph.streams}
-        uniform = self.plan.sim_extra_capacity
-        return sum((uniform.get(n, 0) - e) * width.get(n, 0.0)
-                   for n, e in self.sized_capacity.items())
-
-
-# ---------------------------------------------------------------------------
-# Pareto pruning
-# ---------------------------------------------------------------------------
-
-def _objective(c: Candidate) -> tuple[float, float, float]:
-    """The maximized objective vector shared by ``pareto_frontier`` and the
-    hypervolume indicator: (fmax, -area overhead, -simulated cycles)."""
-    return (c.report.fmax_mhz, -c.plan.area_overhead,
-            -(c.sim.cycles if c.sim is not None else 0))
-
-
-def pareto_indices(vectors: Sequence[tuple]) -> list[int]:
-    """Indices of non-dominated vectors; every objective is maximized.
-
-    ``a`` dominates ``b`` iff ``a >= b`` element-wise with at least one
-    strict inequality — so points with *identical* vectors never dominate
-    each other and are all kept (tie handling)."""
-    keep = []
-    for i, vi in enumerate(vectors):
-        dominated = False
-        for j, vj in enumerate(vectors):
-            if j == i:
-                continue
-            if (all(a >= b for a, b in zip(vj, vi))
-                    and any(a > b for a, b in zip(vj, vi))):
-                dominated = True
-                break
-        if not dominated:
-            keep.append(i)
-    return keep
-
-
-def pareto_frontier(cands: Sequence[Candidate]) -> list[Candidate]:
-    """Feasible, routed, non-deadlocked candidates that are Pareto-optimal
-    over (fmax up, area_overhead down, simulated cycles down)."""
-    ok = [c for c in cands
-          if c.plan is not None and c.report and c.report.routed
-          and (c.sim is None or not c.sim.deadlocked)]
-    return [ok[i] for i in pareto_indices([_objective(c) for c in ok])]
-
-
-# ---------------------------------------------------------------------------
-# joint search
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class SearchResult:
-    #: every evaluated configuration, in enumeration order (failures kept —
-    #: the paper's Table 10 reports those as 'Failed')
-    candidates: list[Candidate]
-    #: Pareto-optimal subset over (fmax, area_overhead, sim cycles)
-    frontier: list[Candidate]
-    #: number of ``simulate_batch`` calls the search issued
-    sim_calls: int
-    #: number of configurations evaluated
-    space_size: int
-
-    @property
-    def best(self) -> Candidate:
-        """Highest-fmax routable candidate (frontier first)."""
-        return best_candidate(self.frontier or self.candidates)
-
-
-def _derive_depth_variant(graph: TaskGraph, grid: SlotGrid, base: Plan,
-                          pt: SearchPoint,
-                          **ab_kwargs) -> Plan | InfeasibleError:
-    """Re-pipeline + re-balance ``base``'s floorplan under ``pt``'s depth
-    scale.  The floorplan is depth-invariant, so this skips the ILP; a
-    (theoretically unreachable) balance cycle falls back to a full
-    autobridge run with the point's knobs."""
-    sgrid = grid.with_knobs(row_weight=pt.row_weight, col_weight=pt.col_weight,
-                            depth_scale=pt.depth_scale)
-    fp = dataclasses.replace(base.floorplan, grid=sgrid)
-    pa = assign_pipelining(graph, fp)
-    try:
-        bal = balance_graph(graph, pa.lat)
-    except CycleError:
-        try:
-            return autobridge(graph, grid, max_util=pt.max_util, seed=pt.seed,
-                              row_weight=pt.row_weight,
-                              col_weight=pt.col_weight,
-                              depth_scale=pt.depth_scale, **ab_kwargs)
-        except InfeasibleError as err:
-            return err
-    depth = {name: pa.lat[name] + bal.balance[name] for name in pa.lat}
-    width = {s.name: s.width for s in graph.streams}
-    overhead = sum(d * width[n] for n, d in depth.items())
-    return Plan(graph=graph, floorplan=fp, pipelining=pa, balancing=bal,
-                depth=depth, area_overhead=overhead,
-                feedback_rounds=base.feedback_rounds,
-                co_located=base.co_located,
-                demoted_streams=list(base.demoted_streams))
-
-
-@dataclasses.dataclass
-class DeferredSearch:
-    """Candidate enumeration with throughput scoring deferred.
-
-    ``prepare_design_space`` runs the floorplan -> pipeline -> balance
-    co-optimization and the physical model for every point but leaves the
-    simulator out, so a caller can pool the simulation jobs of *many*
-    searches — different designs, different device grids — into one
-    ``simulate_batch`` call (mixed topologies vectorize through the padded
-    backend).  ``sim_jobs`` exposes this search's slice of jobs,
-    ``attach_sim`` distributes that call's results back onto the
-    candidates, and ``finish`` computes the Pareto frontier.
-
-    ``base_sim`` carries an already-simulated unpipelined baseline: when
-    set (``search_until_converged`` reuses round 1's baseline this way),
-    ``sim_jobs`` omits the baseline job and ``attach_sim`` stamps the
-    stored result onto every candidate instead."""
-    graph: TaskGraph
-    grid: SlotGrid
-    model: PhysicalModel
-    candidates: list[Candidate]
-    space_size: int
-    base_sim: SimResult | None = None
-
-    @property
-    def feasible(self) -> list[Candidate]:
-        return [c for c in self.candidates if c.plan is not None]
-
-    def sim_jobs(self) -> list[SimJob]:
-        """The shared unpipelined baseline (omitted when ``base_sim`` is
-        already known) followed by one job per feasible candidate (empty
-        when there is nothing to simulate)."""
-        feas = self.feasible
-        if not feas:
-            return []
-        jobs = [c.plan.sim_job() for c in feas]
-        if self.base_sim is None:
-            jobs.insert(0, SimJob(self.graph))
-        return jobs
-
-    def attach_sim(self, results: Sequence[SimResult]) -> None:
-        """Distribute ``simulate_batch`` results produced from
-        ``sim_jobs()`` (same order: baseline first unless ``base_sim``
-        was supplied up front)."""
-        feas = self.feasible
-        if not feas:
-            return
-        if self.base_sim is None:
-            self.base_sim = results[0]
-            results = results[1:]
-        for c, res in zip(feas, results):
-            c.sim = res
-            c.base_sim = self.base_sim
-
-    def finish(self, *, sim_calls: int = 0) -> SearchResult:
-        return SearchResult(candidates=self.candidates,
-                            frontier=pareto_frontier(self.candidates),
-                            sim_calls=sim_calls,
-                            space_size=self.space_size)
-
-
-def pool_simulations(preps: Sequence[DeferredSearch], *,
-                     firings: int) -> list[SimResult]:
-    """Score many deferred searches' jobs in ONE ``simulate_batch`` call.
-
-    Concatenates every search's ``sim_jobs()``, runs the single batched
-    call (mixed topologies vectorize through the padded backend), and
-    distributes each search's slice back via ``attach_sim``.  Returns the
-    flat result list ([] when there was nothing to score) so callers can
-    record metadata such as the engines used."""
-    jobs: list[SimJob] = []
-    spans: list[tuple[int, int]] = []
-    for prep in preps:
-        pj = prep.sim_jobs()
-        spans.append((len(jobs), len(jobs) + len(pj)))
-        jobs.extend(pj)
-    if not jobs:
-        return []
-    results = simulate_batch(jobs, firings=firings)
-    for prep, (lo, hi) in zip(preps, spans):
-        prep.attach_sim(results[lo:hi])
-    return results
-
-
-def timed_pool_simulations(preps: Sequence[DeferredSearch], *,
-                           firings: int) -> tuple[list[SimResult], dict]:
-    """``pool_simulations`` plus the benchmark drivers' metadata recording:
-    resets the global engine counters, times the batched call, and returns
-    ``(results, meta)`` where ``meta`` is the JSON-ready dict every
-    ``BENCH_*.json`` writer stores under its top-level ``"sim"`` key —
-    ``{firings, jobs, invocations, counts, backends, wall_s}`` — and the
-    CI regression gate inspects to prove the suite stayed vectorized."""
-    reset_engine_counts()
-    t0 = time.monotonic()
-    results = pool_simulations(preps, firings=firings)
-    wall = time.monotonic() - t0
-    counts = engine_counts()
-    meta = {"firings": firings, "jobs": len(results),
-            "invocations": sum(counts.values()), "counts": counts,
-            "backends": sorted({r.engine for r in results}),
-            "wall_s": wall}
-    return results, meta
-
-
-def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
-                         space: SearchSpace | None = None,
-                         mode: str = "grid",
-                         n_samples: int = 64,
-                         sample_seed: int = 0,
-                         points: Sequence[SearchPoint] | None = None,
-                         model: PhysicalModel = PhysicalModel(),
-                         score: Callable[[Plan], TimingReport] | None = None,
-                         floorplan_cache: FloorplanCache | None = None,
-                         base_sim: SimResult | None = None,
-                         **ab_kwargs) -> DeferredSearch:
-    """Enumerate and physically score every search point, deferring the
-    batched throughput simulation to the caller (see ``DeferredSearch``).
-
-    mode    — "grid" sweeps the full cartesian product of ``space``;
-              "random" draws ``n_samples`` distinct points from it.  A
-              continuous space (``Interval`` axes) cannot be enumerated,
-              so "grid" silently degrades to "random" there.
-    points  — explicit point list (e.g. from ``SearchSpace.refine``);
-              overrides ``mode``
-    floorplan_cache — memoizes the ILP floorplan solves across calls
-              (refine rounds, device sweeps); see ``FloorplanCache``
-    base_sim — an already-simulated unpipelined baseline to reuse instead
-              of scheduling the baseline job again (``DeferredSearch``)
-    """
-    space = space or SearchSpace()
-    if mode == "grid" and space.continuous and points is None:
-        mode = "random"
-    if points is not None:
-        points = list(points)
-    elif mode == "grid":
-        points = space.grid_points()
-    elif mode == "random":
-        points = space.sample(n_samples, seed=sample_seed)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-    if floorplan_cache is not None:
-        ab_kwargs = {**ab_kwargs, "cache": floorplan_cache}
-
-    cands: list[Candidate] = []
-    plans: dict[tuple, tuple[float, Plan | InfeasibleError]] = {}
-    # autobridge's cycle-breaking last resort mutates the input graph
-    # (stream demotion, autobridge.py) — under a joint sweep that would
-    # leak one point's demotion into every later point, the shared
-    # baseline, and the caller's graph.  Snapshot the control flags and
-    # confine any demotion to a per-candidate graph copy.
-    ctrl0 = [s.control for s in graph.streams]
-
-    def _restore_ctrl() -> bool:
-        changed = False
-        for s, c0 in zip(graph.streams, ctrl0):
-            if s.control != c0:
-                s.control = c0
-                changed = True
-        return changed
-
-    def _run_autobridge(g: TaskGraph, pt: SearchPoint):
-        return autobridge(g, grid, max_util=pt.max_util, seed=pt.seed,
-                          row_weight=pt.row_weight, col_weight=pt.col_weight,
-                          depth_scale=pt.depth_scale, **ab_kwargs)
-
-    for pt in points:
-        entry = plans.get(pt.floorplan_key)
-        if entry is None:
-            try:
-                made = _run_autobridge(graph, pt)
-            except InfeasibleError as err:
-                made = err
-            if _restore_ctrl() and not isinstance(made, InfeasibleError):
-                # this point needs the demotion: re-run on a private copy so
-                # the candidate keeps a consistent graph while the shared
-                # one stays pristine (simulate_batch groups the split
-                # topology separately inside the same padded array-sweep)
-                try:
-                    made = _run_autobridge(copy.deepcopy(graph), pt)
-                except InfeasibleError as err:
-                    made = err
-                _restore_ctrl()
-            entry = (pt.depth_scale, made)
-            plans[pt.floorplan_key] = entry
-        base_scale, base = entry
-        if isinstance(base, InfeasibleError):
-            cands.append(Candidate(max_util=pt.max_util, plan=None,
-                                   report=None, error=str(base), point=pt))
-            continue
-        if pt.depth_scale == base_scale:
-            plan = base
-        else:
-            plan = _derive_depth_variant(base.graph, grid, base, pt,
-                                         **ab_kwargs)
-            if isinstance(plan, InfeasibleError):
-                cands.append(Candidate(max_util=pt.max_util, plan=None,
-                                       report=None, error=str(plan),
-                                       point=pt))
-                continue
-        if score is not None:
-            rep = score(plan)
-        else:
-            rep = analyze_timing(plan.graph, grid, plan.floorplan.placement,
-                                 plan.depth, model)
-        cands.append(Candidate(max_util=pt.max_util, plan=plan, report=rep,
-                               point=pt))
-
-    return DeferredSearch(graph=graph, grid=grid, model=model,
-                          candidates=cands, space_size=len(points),
-                          base_sim=base_sim)
-
-
-def _buffer_bits(plan: Plan, extra_capacity: dict[str, int]) -> dict[str, float]:
-    """Per-stream inserted buffering in bits: declared FIFO storage plus
-    pipeline registers plus the given headroom, width-weighted — the
-    quantity ``analyze_timing(buffer_bits=...)`` charges into slots."""
-    return {s.name: (int(s.depth) + plan.depth.get(s.name, 0)
-                     + extra_capacity.get(s.name, 0)) * s.width
-            for s in plan.graph.streams}
-
-
-def _size_fifos(res: SearchResult, grid: SlotGrid, model: PhysicalModel,
-                firings: int) -> None:
-    """Profile-driven FIFO sizing of the frontier (one more batch call),
-    plus the area-model feedback: both the sized design and its
-    uniform-headroom twin are re-scored with their buffering footprint
-    charged into slot utilization, so reclaimed bits show up as fmax."""
-    frontier = res.frontier
-    jobs = []
-    for c in frontier:
-        g = c.plan.graph
-        prof = simulate(g, firings=firings, latency=c.plan.depth,
-                        extra_capacity=c.plan.sim_extra_capacity,
-                        profile=True)
-        c.profile = prof.profiles
-        # observed-peak trimming: occupancy never exceeded peak, so
-        # capacity=peak admits the exact same firing schedule.  Streams the
-        # profiler does not model (control streams) keep their uniform
-        # headroom — they were never observed, so nothing was reclaimed and
-        # no area credit may be taken for them.
-        declared = {s.name: int(s.depth) for s in g.streams}
-        c.sized_capacity = dict(c.plan.sim_extra_capacity)
-        c.sized_capacity.update({name: max(0, p.peak - declared[name])
-                                 for name, p in prof.profiles.items()})
-        # sized variant paired with its uniform-headroom reference at
-        # the *same* firing count, so the verdict below is well-defined
-        # even when fifo_firings != sim_firings
-        jobs.append(SimJob(g, latency=dict(c.plan.depth),
-                           extra_capacity=dict(c.sized_capacity)))
-        jobs.append(c.plan.sim_job())
-    results = simulate_batch(jobs, firings=firings)
-    res.sim_calls += 1
-    for i, c in enumerate(frontier):
-        sized, uniform = results[2 * i], results[2 * i + 1]
-        if sized.deadlocked or sized.cycles != uniform.cycles:
-            # trimming broke the schedule (theoretically unreachable):
-            # revert rather than hand out an unverified sizing
-            c.sized_capacity = None
-            c.sized_sim = None
-            continue
-        c.sized_sim = sized
-        placement = c.plan.floorplan.placement
-        c.uniform_report = analyze_timing(
-            c.plan.graph, grid, placement, c.plan.depth, model,
-            buffer_bits=_buffer_bits(c.plan, c.plan.sim_extra_capacity))
-        c.sized_report = analyze_timing(
-            c.plan.graph, grid, placement, c.plan.depth, model,
-            buffer_bits=_buffer_bits(c.plan, c.sized_capacity))
-
-
-def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
-                         space: SearchSpace | None = None,
-                         mode: str = "grid",
-                         n_samples: int = 64,
-                         sample_seed: int = 0,
-                         points: Sequence[SearchPoint] | None = None,
-                         model: PhysicalModel = PhysicalModel(),
-                         score: Callable[[Plan], TimingReport] | None = None,
-                         sim_firings: int | None = None,
-                         fifo_sizing: bool = False,
-                         fifo_firings: int | None = None,
-                         **ab_kwargs) -> SearchResult:
-    """Joint batched design-space search (see module docstring).
-
-    mode         — "grid" sweeps the full cartesian product of ``space``;
-                   "random" draws ``n_samples`` distinct points from it
-    points       — explicit point list (``SearchSpace.refine`` output);
-                   overrides ``mode``
-    sim_firings  — when set, score *all* feasible candidates' throughput in
-                   one vectorized ``simulate_batch`` call (plus the shared
-                   unpipelined baseline)
-    fifo_sizing  — profile frontier candidates with the event engine and
-                   re-size their FIFO headroom to observed peak occupancy;
-                   one more batch call verifies cycles are unchanged, and
-                   the reclaimed bits are credited back into slot
-                   utilization (``sized_report`` vs ``uniform_report``)
-    ab_kwargs    — forwarded to ``autobridge`` (e.g. ``same_slot``)
-
-    >>> from repro.core import (SearchSpace, SlotGrid, TaskGraphBuilder,
-    ...                         explore_design_space)
-    >>> b = TaskGraphBuilder("chain")
-    >>> _ = b.stream("s0", width=64)
-    >>> _ = b.invoke("P", area={"LUT": 100}, outs=["s0"])
-    >>> _ = b.invoke("C", area={"LUT": 100}, ins=["s0"])
-    >>> grid = SlotGrid("g", rows=1, cols=2, base_capacity={"LUT": 150},
-    ...                 max_util=1.0)
-    >>> res = explore_design_space(b.build(), grid,
-    ...                            space=SearchSpace(utils=(0.9, 1.0)),
-    ...                            sim_firings=50)
-    >>> res.space_size, res.sim_calls
-    (2, 1)
-    >>> res.best.throughput_preserved
-    True
-    """
-    prep = prepare_design_space(graph, grid, space=space, mode=mode,
-                                n_samples=n_samples, sample_seed=sample_seed,
-                                points=points, model=model, score=score,
-                                **ab_kwargs)
-    sim_calls = 0
-    if sim_firings:
-        jobs = prep.sim_jobs()
-        if jobs:
-            prep.attach_sim(simulate_batch(jobs, firings=sim_firings))
-            sim_calls += 1
-    res = prep.finish(sim_calls=sim_calls)
-    if fifo_sizing and res.frontier:
-        _size_fifos(res, grid, model, fifo_firings or sim_firings or 200)
-    return res
-
-
-# ---------------------------------------------------------------------------
-# converging search: refine -> search until the frontier stops moving
-# ---------------------------------------------------------------------------
-
-def hypervolume(vectors: Sequence[tuple], ref: Sequence[float]) -> float:
-    """Exact hypervolume of a maximized point set w.r.t. reference ``ref``.
-
-    The dominated volume between ``ref`` and the points — the standard
-    Pareto-frontier quality indicator ``search_until_converged`` watches.
-    Points are clipped to ``ref`` (a point at or below the reference on an
-    axis contributes zero extent there), so the indicator is monotone under
-    adding points.  Exact recursive slicing: fine for the tens-of-points
-    frontiers this search produces, any dimensionality.
-
-    >>> hypervolume([(2.0, 2.0)], (0.0, 0.0))
-    4.0
-    >>> hypervolume([(2.0, 1.0), (1.0, 2.0)], (0.0, 0.0))
-    3.0
-    >>> hypervolume([(2.0, 1.0), (1.0, 2.0), (1.5, 1.5)], (0.0, 0.0))
-    3.25
-    >>> hypervolume([], (0.0, 0.0))
-    0.0
-    """
-    ref = tuple(ref)
-    pts = [tuple(max(v, r) for v, r in zip(p, ref)) for p in vectors]
-    pts = [p for p in pts if any(v > r for v, r in zip(p, ref))]
-
-    def hv(points: list[tuple], r: tuple) -> float:
-        if not points:
-            return 0.0
-        if len(r) == 1:
-            return max(p[0] for p in points) - r[0]
-        # slice along the last axis, top slab first; each slab's area is the
-        # (d-1)-dim hypervolume of every point reaching that high or higher
-        points = sorted(points, key=lambda p: -p[-1])
-        vol = 0.0
-        for i, p in enumerate(points):
-            lo = points[i + 1][-1] if i + 1 < len(points) else r[-1]
-            thick = p[-1] - lo
-            if thick > 0:
-                vol += thick * hv([q[:-1] for q in points[:i + 1]], r[:-1])
-        return vol
-
-    return hv(pts, ref)
-
-
-@dataclasses.dataclass
-class ConvergedSearch:
-    """Result of ``search_until_converged``: per-round results, the merged
-    Pareto frontier over every evaluated point, and the hypervolume
-    trajectory that decided convergence."""
-    #: per-round ``SearchResult``s, in execution order
-    rounds: list[SearchResult]
-    #: Pareto frontier over the union of all rounds' candidates
-    frontier: list[Candidate]
-    #: merged-frontier hypervolume after each round (monotone by
-    #: construction: the merged frontier only ever gains points)
-    hypervolumes: list[float]
-    #: the fixed reference point the hypervolumes are measured against
-    #: (established from round 1's feasible candidates)
-    ref: tuple[float, float, float] | None
-    #: True when the relative hypervolume improvement fell below ``tol``
-    #: before the round budget ran out
-    converged: bool
-    #: total ``simulate_batch`` calls across all rounds (the baseline is
-    #: simulated once, in round 1, and reused)
-    sim_calls: int
-    #: total configurations evaluated (across rounds, anchors re-counted)
-    points_evaluated: int
-    #: the floorplan memoization shared by every round
-    cache: FloorplanCache
-
-    @property
-    def rounds_run(self) -> int:
-        return len(self.rounds)
-
-    @property
-    def best(self) -> Candidate:
-        """Highest-fmax routable candidate on the merged frontier."""
-        return best_candidate(self.frontier)
-
-
-def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
-                           space: SearchSpace | None = None,
-                           rounds: int = 4,
-                           tol: float = 0.02,
-                           points_per_round: int = 24,
-                           sim_firings: int | None = 200,
-                           sample_seed: int = 0,
-                           initial_points: Sequence[SearchPoint] | None = None,
-                           model: PhysicalModel = PhysicalModel(),
-                           cache: FloorplanCache | None = None,
-                           **ab_kwargs) -> ConvergedSearch:
-    """Converging design-space search: iterate refine -> search until the
-    Pareto frontier's hypervolume stops improving.
-
-    Round 1 samples ``points_per_round`` configurations from ``space``
-    (continuous ``Interval`` axes draw uniformly; ``initial_points``, when
-    given, anchor the round — e.g. the discrete sweep a converged run must
-    never lose to).  Every later round re-anchors on the incumbent
-    frontier's points and *compounds* the zoom: the working space is
-    re-narrowed around the frontier each round (``SearchSpace.refined``:
-    discrete axes halve their grid pitch, continuous axes shrink their
-    range geometrically) and the round's draws come from that ever-tighter
-    space.  After each round the frontier is merged across *all* evaluated
-    candidates and its hypervolume w.r.t. a fixed reference point (set from
-    round 1) is appended to the trajectory; the loop stops when the
-    relative improvement falls below ``tol`` or ``rounds`` are exhausted.
-
-    Cost controls built in: the unpipelined baseline is simulated once, in
-    round 1, and reused by every later round (``DeferredSearch.base_sim``);
-    all rounds share one ``FloorplanCache``, so re-anchored frontier points
-    and revisited knob values skip the ILP solve entirely —
-    ``floorplan_counts()`` proves it (solves < points evaluated, hits > 0).
-
-    >>> from repro.core import (Interval, SearchSpace, SlotGrid,
-    ...                         TaskGraphBuilder, search_until_converged)
-    >>> b = TaskGraphBuilder("chain")
-    >>> _ = b.stream("s0", width=64)
-    >>> _ = b.invoke("P", area={"LUT": 100}, outs=["s0"])
-    >>> _ = b.invoke("C", area={"LUT": 100}, ins=["s0"])
-    >>> grid = SlotGrid("g", rows=1, cols=2, base_capacity={"LUT": 150},
-    ...                 max_util=1.0)
-    >>> res = search_until_converged(
-    ...     b.build(), grid, space=SearchSpace(utils=Interval(0.8, 1.0)),
-    ...     rounds=3, points_per_round=4, sim_firings=50)
-    >>> res.rounds_run <= 3 and len(res.frontier) >= 1
-    True
-    >>> res.hypervolumes == sorted(res.hypervolumes)   # monotone
-    True
-    >>> res.cache.hits > 0            # refine rounds reuse floorplans
-    True
-    """
-    space = space or SearchSpace()
-    cur_space = space
-    cache = cache or FloorplanCache()
-    pts: list[SearchPoint] = list(initial_points or ())
-    if len(pts) < points_per_round:
-        have = set(pts)
-        for p in space.sample(points_per_round, seed=sample_seed):
-            if len(pts) >= points_per_round:
-                break
-            if p not in have:
-                have.add(p)
-                pts.append(p)
-
-    results: list[SearchResult] = []
-    evaluated: list[Candidate] = []     # deduplicated by point
-    seen_pts: set[SearchPoint] = set()
-    hvs: list[float] = []
-    ref: tuple[float, float, float] | None = None
-    base_sim: SimResult | None = None
-    sim_calls = 0
-    points_evaluated = 0
-    converged = False
-    frontier: list[Candidate] = []
-
-    for r in range(max(rounds, 1)):
-        prep = prepare_design_space(graph, grid, points=pts, model=model,
-                                    floorplan_cache=cache,
-                                    base_sim=base_sim, **ab_kwargs)
-        round_calls = 0
-        if sim_firings:
-            jobs = prep.sim_jobs()
-            if jobs:
-                prep.attach_sim(simulate_batch(jobs, firings=sim_firings))
-                round_calls = 1
-        base_sim = prep.base_sim
-        sim_calls += round_calls
-        points_evaluated += prep.space_size
-        res = prep.finish(sim_calls=round_calls)
-        results.append(res)
-        for c in res.candidates:
-            if c.point is None or c.point not in seen_pts:
-                if c.point is not None:
-                    seen_pts.add(c.point)
-                evaluated.append(c)
-        frontier = pareto_frontier(evaluated)
-        if not frontier:
-            # nothing feasible yet: re-sample fresh points and try again
-            pts = cur_space.sample(points_per_round,
-                                   seed=sample_seed + r + 1)
-            continue
-        if ref is None:
-            vecs = [_objective(c) for c in evaluated if c.plan is not None
-                    and c.report and c.report.routed]
-            ref = tuple(min(v[i] for v in vecs) - 1.0 for i in range(3))
-        hvs.append(hypervolume([_objective(c) for c in frontier], ref))
-        if len(hvs) >= 2:
-            prev = hvs[-2]
-            if hvs[-1] - prev <= tol * max(abs(prev), 1e-12):
-                converged = True
-                break
-        if r + 1 < max(rounds, 1):
-            anchors = [c.point for c in frontier if c.point is not None]
-            # compound the zoom: narrow the working space around the
-            # incumbent frontier, then draw the round's points from it
-            cur_space = cur_space.refined(frontier)
-            fresh = cur_space.sample(points_per_round,
-                                     seed=sample_seed + 101 * (r + 1))
-            pts, have = [], set()
-            for p in anchors + fresh:
-                if p not in have:
-                    have.add(p)
-                    pts.append(p)
-
-    return ConvergedSearch(rounds=results, frontier=frontier,
-                           hypervolumes=hvs, ref=ref, converged=converged,
-                           sim_calls=sim_calls,
-                           points_evaluated=points_evaluated, cache=cache)
-
-
-# ---------------------------------------------------------------------------
-# one-call multi-device sweeps
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class BackendSweep:
-    """Per-device-grid search results whose throughput scoring shared one
-    batched simulator call (``sim_calls`` counts that shared call once)."""
-    results: dict[str, SearchResult]
-    sim_calls: int
-
-    @property
-    def best(self) -> tuple[str, Candidate]:
-        """(grid name, candidate) of the highest-fmax routable candidate
-        across every grid."""
-        picks: dict[str, Candidate] = {}
-        for name, res in self.results.items():
-            try:
-                picks[name] = best_candidate(res.candidates)
-            except InfeasibleError:
-                continue
-        if not picks:
-            raise InfeasibleError("no routable candidate on any device grid")
-        name = max(picks, key=lambda k: picks[k].fmax)
-        return name, picks[name]
-
-    def table(self) -> list[dict]:
-        """One comparison row per grid (the multi-device sweep summary)."""
-        rows = []
-        for name, res in self.results.items():
-            try:
-                c = best_candidate(res.candidates)
-            except InfeasibleError:
-                rows.append({
-                    "grid": name, "routable": False, "fmax_mhz": 0.0,
-                    "util": None, "area_overhead_bits": None,
-                    "cycles": None, "throughput_preserved": None,
-                    "frontier": len(res.frontier),
-                })
-                continue
-            rows.append({
-                "grid": name, "routable": True, "fmax_mhz": c.fmax,
-                "util": c.point.max_util if c.point else None,
-                "area_overhead_bits": c.plan.area_overhead,
-                "cycles": c.sim.cycles if c.sim else None,
-                "throughput_preserved": c.throughput_preserved,
-                "frontier": len(res.frontier),
-            })
-        return rows
-
-
-def sweep_backends(graph: TaskGraph,
-                   grids: Mapping[str, SlotGrid] | Sequence[SlotGrid], *,
-                   space: SearchSpace | None = None,
-                   mode: str = "grid",
-                   n_samples: int = 64,
-                   sample_seed: int = 0,
-                   model: PhysicalModel = PhysicalModel(),
-                   sim_firings: int | None = 200,
-                   cache: FloorplanCache | None = None,
-                   **ab_kwargs) -> BackendSweep:
-    """One-call multi-device sweep: the same design searched across several
-    device grids (U250/U280/TPU-pod shapes from ``repro.fpga.archs``), with
-    *all* grids' candidates plus their shared baselines scored by a single
-    ``simulate_batch`` call — the padded backend vectorizes across the
-    per-grid candidate sets even when cycle-breaking stream demotions give
-    some candidates a different topology.
-
-    ``grids`` is a name -> ``SlotGrid`` mapping, or a sequence of grids
-    keyed by their ``.name`` (duplicates get a ``#2``-style suffix).
-    Returns a ``BackendSweep``: per-grid ``SearchResult``s, ``best``
-    across grids, and a ``table()`` comparison summary.  All grids share
-    one ``FloorplanCache`` (pass ``cache=`` to share it wider), so a grid
-    appearing twice — or a later converged search on the same grid — skips
-    its ILP solves.
-
-    >>> from repro.core import SearchSpace, SlotGrid, TaskGraphBuilder
-    >>> from repro.core import sweep_backends
-    >>> b = TaskGraphBuilder("chain")
-    >>> _ = b.stream("s0", width=64)
-    >>> _ = b.invoke("P", area={"LUT": 100}, outs=["s0"])
-    >>> _ = b.invoke("C", area={"LUT": 100}, ins=["s0"])
-    >>> small = SlotGrid("small", rows=1, cols=2,
-    ...                  base_capacity={"LUT": 150}, max_util=1.0)
-    >>> wide = SlotGrid("wide", rows=1, cols=4,
-    ...                  base_capacity={"LUT": 300}, max_util=1.0)
-    >>> sweep = sweep_backends(b.build(), {"small": small, "wide": wide},
-    ...                        space=SearchSpace(utils=(0.9, 1.0)),
-    ...                        sim_firings=50)
-    >>> sorted(sweep.results), sweep.sim_calls
-    (['small', 'wide'], 1)
-    >>> name, champ = sweep.best
-    >>> champ.plan is not None
-    True
-    """
-    if isinstance(grids, Mapping):
-        named = dict(grids)
-    else:
-        named = {}
-        for g in grids:
-            key = g.name
-            i = 2
-            while key in named:
-                key = f"{g.name}#{i}"
-                i += 1
-            named[key] = g
-    if not named:
-        raise ValueError("sweep_backends needs at least one device grid")
-
-    cache = cache or FloorplanCache()
-    preps = {name: prepare_design_space(graph, g, space=space, mode=mode,
-                                        n_samples=n_samples,
-                                        sample_seed=sample_seed, model=model,
-                                        floorplan_cache=cache,
-                                        **ab_kwargs)
-             for name, g in named.items()}
-    sim_calls = 0
-    if sim_firings:
-        if pool_simulations(list(preps.values()), firings=sim_firings):
-            sim_calls = 1
-    return BackendSweep(
-        results={name: prep.finish(sim_calls=sim_calls)
-                 for name, prep in preps.items()},
-        sim_calls=sim_calls)
-
-
-# ---------------------------------------------------------------------------
-# single-axis compatibility wrapper (paper §6.3 verbatim)
-# ---------------------------------------------------------------------------
-
-def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
-                       utils: tuple[float, ...] = DEFAULT_UTILS,
-                       seed: int = 0,
-                       model: PhysicalModel = PhysicalModel(),
-                       score: Callable[[Plan], TimingReport] | None = None,
-                       sim_firings: int | None = None,
-                       **ab_kwargs) -> list[Candidate]:
-    """Single-axis max-util sweep: one candidate per util point, in sweep
-    order, infeasible points kept as failed candidates (paper Table 10).
-    Thin wrapper over ``explore_design_space`` with every other axis pinned
-    to its default."""
-    space = SearchSpace(seeds=(seed,), utils=tuple(utils))
-    res = explore_design_space(graph, grid, space=space, model=model,
-                               score=score, sim_firings=sim_firings,
-                               **ab_kwargs)
-    return res.candidates
-
-
-def best_candidate(cands: list[Candidate]) -> Candidate:
-    ok = [c for c in cands
-          if c.plan is not None and c.report and c.report.routed
-          and (c.sim is None or not c.sim.deadlocked)]
-    if not ok:
-        raise InfeasibleError("no routable floorplan candidate")
-    return max(ok, key=lambda c: c.report.fmax_mhz)
+sys.modules[__name__] = _engine

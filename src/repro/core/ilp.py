@@ -49,6 +49,14 @@ def solve_counts() -> dict[str, int]:
     return dict(_SOLVE_COUNTS)
 
 
+def merge_solve_counts(bipartitions: int) -> None:
+    """Fold a worker process's bipartition-count delta into this process's
+    counter.  Module globals are per-process, so solves performed inside a
+    ``ProcessPoolExecutor`` worker are invisible here until the pool merges
+    the worker's delta back (``repro.search.pool``)."""
+    _SOLVE_COUNTS["bipartitions"] += int(bipartitions)
+
+
 @dataclasses.dataclass
 class Edge:
     """Cost term ``w * |k + a*du + b*dv|``.

@@ -1,0 +1,43 @@
+"""repro.search — the design-space search subsystem (public entry point).
+
+Everything the co-optimization search offers lives here:
+
+* ``space``     — ``SearchSpace``/``SearchPoint``/``Interval``: the joint
+                  knob axes, grid/random sampling, frontier refinement;
+* ``pareto``    — non-domination and the exact hypervolume indicator;
+* ``engine``    — ``explore_design_space`` (one-shot batched search),
+                  ``search_until_converged`` (refine -> search loop),
+                  ``sweep_backends`` (one-call multi-device sweeps) and the
+                  deferred-scoring plumbing (``DeferredSearch``);
+* ``pool``      — the process-pool execution layer: parallel cold ILP
+                  solves with mergeable caches/counters (``jobs=``);
+* ``surrogate`` — response-surface-guided round proposals (``proposer=``).
+
+``repro.core.explorer`` re-exports this module's names for backward
+compatibility; new code should import from ``repro.search``.
+"""
+from .engine import (BackendSweep, Candidate, ConvergedSearch,
+                     DeferredSearch, SearchResult, best_candidate,
+                     explore_design_space, explore_floorplans,
+                     pareto_frontier, pool_simulations,
+                     prepare_design_space, search_until_converged,
+                     sweep_backends, timed_pool_simulations)
+from .pareto import hypervolume, objective_vector, pareto_indices
+from .pool import (PoolStats, pool_counts, reset_pool_counts,
+                   warm_floorplan_cache)
+from .space import DEFAULT_UTILS, Interval, SearchPoint, SearchSpace
+from .surrogate import (ResponseSurface, SurrogateProposer, UniformProposer,
+                        make_proposer)
+
+__all__ = [
+    "BackendSweep", "Candidate", "ConvergedSearch", "DeferredSearch",
+    "SearchResult", "best_candidate", "explore_design_space",
+    "explore_floorplans", "pareto_frontier", "pool_simulations",
+    "prepare_design_space", "search_until_converged", "sweep_backends",
+    "timed_pool_simulations",
+    "hypervolume", "objective_vector", "pareto_indices",
+    "PoolStats", "pool_counts", "reset_pool_counts", "warm_floorplan_cache",
+    "DEFAULT_UTILS", "Interval", "SearchPoint", "SearchSpace",
+    "ResponseSurface", "SurrogateProposer", "UniformProposer",
+    "make_proposer",
+]

@@ -1,0 +1,176 @@
+"""Parallel floorplan solving: fan cold ILP solves out over a process pool.
+
+The per-point ``autobridge`` ILP solve is the dominant sequential cost of a
+design-space round (the AutoBridge observation the paper builds on), and the
+solves of one round are independent of each other.  ``warm_floorplan_cache``
+ships each *unique-floorplan* point to a ``concurrent.futures
+.ProcessPoolExecutor`` worker; the worker runs the full ``autobridge``
+co-optimization against a fresh ``FloorplanCache`` (capturing every solve of
+the cycle-feedback chain, infeasibility verdicts included) and returns
+
+    (its cache, its counter deltas, the error string if infeasible)
+
+which the parent merges back — ``FloorplanCache.merge`` for the entries,
+``merge_floorplan_counts`` for the per-process global counters that would
+otherwise silently read 0 in the parent.  The engine then *replays* the
+round in-process against the pre-warmed cache, so every floorplan lookup is
+a hit and the produced candidates are **bit-identical** to a sequential run:
+``floorplan()`` is deterministic, and the replay path is exactly the
+``jobs=1`` code path.
+
+``jobs=1`` never touches the pool (the exact in-process fallback); a worker
+hitting ``InfeasibleError`` is a *result*, not a failure — the verdict is
+cached and the replay marks the candidate failed, the pool survives.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import multiprocessing
+import time
+from typing import Sequence
+
+from repro.core.autobridge import (FloorplanCache, autobridge,
+                                   floorplan_counts, initial_floorplan_key,
+                                   merge_floorplan_counts)
+from repro.core.devicegrid import SlotGrid
+from repro.core.graph import TaskGraph
+from repro.core.ilp import InfeasibleError
+
+from .space import SearchPoint
+
+# Pool activity since the last reset (module-global, mirroring the
+# simulator's ``engine_counts`` and autobridge's ``floorplan_counts``):
+# benchmarks record these in the BENCH JSON ``sim.pool`` block and the CI
+# gate checks a parallel run really dispatched and merged worker results.
+_POOL_COUNTS = {"dispatched": 0, "merged": 0, "worker_solves": 0,
+                "worker_infeasible": 0}
+
+
+def reset_pool_counts() -> None:
+    """Zero the global worker-pool dispatch/merge counters."""
+    for k in _POOL_COUNTS:
+        _POOL_COUNTS[k] = 0
+
+
+def pool_counts() -> dict[str, int]:
+    """Snapshot of pool dispatches/merges/worker solves since last reset."""
+    return dict(_POOL_COUNTS)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """One search's worker-pool activity (``ConvergedSearch.pool``)."""
+    #: worker processes requested (1 = sequential, pool never created)
+    jobs: int = 1
+    #: points shipped to workers (unique floorplans not already cached)
+    dispatched: int = 0
+    #: worker results merged back into the parent cache/counters
+    merged: int = 0
+    #: ILP-backed ``floorplan()`` runs performed inside workers
+    worker_solves: int = 0
+    #: worker runs that ended in a (cached) infeasibility verdict
+    worker_infeasible: int = 0
+    #: cumulative wall time spent inside pool fan-outs
+    wall_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def absorb(self, other: "PoolStats") -> None:
+        """Accumulate another fan-out's stats (per-round -> per-search)."""
+        self.jobs = max(self.jobs, other.jobs)
+        self.dispatched += other.dispatched
+        self.merged += other.merged
+        self.worker_solves += other.worker_solves
+        self.worker_infeasible += other.worker_infeasible
+        self.wall_s += other.wall_s
+
+
+def _point_kwargs(pt: SearchPoint) -> dict:
+    """The ``autobridge`` knob kwargs of one search point."""
+    return {"max_util": pt.max_util, "seed": pt.seed,
+            "row_weight": pt.row_weight, "col_weight": pt.col_weight,
+            "depth_scale": pt.depth_scale}
+
+
+def _solve_point(graph: TaskGraph, grid: SlotGrid, pt_kwargs: dict,
+                 ab_kwargs: dict) -> tuple[FloorplanCache, dict, str | None]:
+    """Worker entry point (module-level so it pickles by reference).
+
+    Runs the full autobridge chain for one point against a fresh cache;
+    the cache captures every floorplan solve of the feedback loop, so the
+    parent replay never pays an ILP.  Counter deltas are before/after
+    snapshots: pool workers are reused across tasks, so absolute counter
+    values would double-count."""
+    before = floorplan_counts()
+    cache = FloorplanCache()
+    err = None
+    try:
+        autobridge(graph, grid, cache=cache, **pt_kwargs, **ab_kwargs)
+    except InfeasibleError as e:
+        err = str(e)
+    after = floorplan_counts()
+    delta = {k: after[k] - before[k] for k in after}
+    return cache, delta, err
+
+
+def _mp_context():
+    """Prefer fork (POSIX); fall back to spawn where fork is unavailable.
+
+    Fork is the only start method that works for unguarded caller scripts
+    (``examples/quickstart.py``-style: no ``if __name__ == "__main__"``)
+    and interactive sessions — spawn/forkserver re-run ``__main__``
+    preparation in every worker.  CPython warns about forking a process
+    whose other threads (e.g. jax/XLA pools, once jax is imported) hold
+    locks; that hazard applies to children that *use* those runtimes,
+    while these workers only run the pure-Python/NumPy solve chain and
+    never touch jax — the configuration the whole tier-1 suite exercises."""
+    methods = multiprocessing.get_all_start_methods()
+    return multiprocessing.get_context(
+        "fork" if "fork" in methods else "spawn")
+
+
+def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
+                         points: Sequence[SearchPoint], *,
+                         cache: FloorplanCache,
+                         jobs: int,
+                         ab_kwargs: dict | None = None) -> PoolStats:
+    """Solve the given points' floorplans in parallel and merge the results
+    into ``cache`` (plus this process's global counters).
+
+    Points whose initial floorplan key is already cached are skipped — a
+    prior full run cached their whole solve chain, so re-dispatching would
+    only burn a worker.  With ``jobs <= 1`` or nothing to solve this is a
+    no-op returning empty stats."""
+    ab_kwargs = {k: v for k, v in (ab_kwargs or {}).items() if k != "cache"}
+    stats = PoolStats(jobs=max(jobs, 1))
+    if jobs <= 1:
+        return stats
+    todo = [pt for pt in points
+            if initial_floorplan_key(graph, grid, **_point_kwargs(pt),
+                                     **ab_kwargs) not in cache]
+    if not todo:
+        return stats
+    t0 = time.monotonic()
+    with concurrent.futures.ProcessPoolExecutor(
+            max_workers=min(jobs, len(todo)),
+            mp_context=_mp_context()) as ex:
+        futures = [ex.submit(_solve_point, graph, grid, _point_kwargs(pt),
+                             ab_kwargs)
+                   for pt in todo]
+        stats.dispatched = len(futures)
+        for fut in futures:
+            wcache, delta, err = fut.result()
+            cache.merge(wcache)
+            merge_floorplan_counts(delta)
+            stats.merged += 1
+            stats.worker_solves += delta.get("solved", 0)
+            if err is not None:
+                stats.worker_infeasible += 1
+    stats.wall_s = time.monotonic() - t0
+    _POOL_COUNTS["dispatched"] += stats.dispatched
+    _POOL_COUNTS["merged"] += stats.merged
+    _POOL_COUNTS["worker_solves"] += stats.worker_solves
+    _POOL_COUNTS["worker_infeasible"] += stats.worker_infeasible
+    return stats

@@ -17,8 +17,144 @@ elements shrunk — re-running the test after each candidate simplification
 and keeping it only if the test still fails.  The minimal example is
 printed and its failure re-raised, so fallback-mode CI reports match the
 real-`hypothesis` job's minimized counterexamples closely.
+
+Stateful testing (``RuleBasedStateMachine`` / ``rule`` /
+``run_state_machine``, a minimal ``hypothesis.stateful`` analogue) is
+implemented here unconditionally — it does NOT switch to hypothesis's
+engine, so stateful tests behave identically with and without the real
+library installed.  Random *programs* (sequences of rule calls with drawn
+arguments, drawn from the ``machine_st`` strategies) run against a fresh
+machine instance; a failing program is greedily shrunk — first structurally
+(dropping rule calls) then per-call (shrinking drawn arguments) —
+re-executed from scratch after every candidate simplification, and the
+minimal failing program is printed before the failure is re-raised.
+Machines may define an optional ``finalize`` method: it runs after the
+last rule of every (shrunk or not) program, so end-state invariants
+participate in shrinking.
 """
 from __future__ import annotations
+
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 25
+MAX_SHRINK_TRIES = 500
+
+try:
+    from _pytest.outcomes import Skipped as _Skipped
+except Exception:  # pragma: no cover - pytest always present in CI
+    class _Skipped(BaseException):
+        pass
+
+#: exceptions that must propagate, never count as falsifying examples
+#: (Ctrl-C, interpreter exit, pytest.skip control flow)
+_NON_FALSIFYING = (KeyboardInterrupt, SystemExit, GeneratorExit, _Skipped)
+
+
+# ---------------------------------------------------------------------------
+# strategy machinery — always available: the fallback `given` uses it when
+# hypothesis is missing, and the stateful engine below uses it always
+# ---------------------------------------------------------------------------
+
+class _Strategy:
+    """A value source: boundary examples first, then seeded draws, plus
+    a shrinker yielding strictly-simpler candidates for a value."""
+
+    def __init__(self, edge_values, draw, shrink=None):
+        self.edge_values = list(edge_values)
+        self.draw = draw
+        self.shrink = shrink or (lambda value: ())
+
+
+def _shrink_number(value, target, *, integer):
+    """Candidates between ``value`` and ``target`` (nearest-to-target
+    first: big jumps before single steps)."""
+    if value == target:
+        return
+    yield target
+    mid = (value + target) // 2 if integer else (value + target) / 2
+    if mid not in (value, target):
+        yield mid
+    if integer:
+        step = value - 1 if value > target else value + 1
+        if step != mid:
+            yield step
+
+
+def _integers(min_value=0, max_value=2 ** 31 - 1):
+    target = min(max(0, min_value), max_value)
+    return _Strategy(
+        [min_value, max_value],
+        lambda rng: rng.randint(min_value, max_value),
+        lambda v: _shrink_number(v, target, integer=True))
+
+
+def _sampled_from(elements):
+    elems = list(elements)
+
+    def shrink(v):
+        # earlier elements are simpler; try the front first
+        try:
+            i = elems.index(v)
+        except ValueError:
+            return
+        if i > 0:
+            yield elems[0]
+        if i // 2 not in (0, i):
+            yield elems[i // 2]
+
+    return _Strategy(elems[:2],
+                     lambda rng: elems[rng.randrange(len(elems))],
+                     shrink)
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    target = min(max(0.0, min_value), max_value)
+    return _Strategy(
+        [min_value, max_value],
+        lambda rng: rng.uniform(min_value, max_value),
+        lambda v: _shrink_number(v, target, integer=False))
+
+
+def _booleans():
+    return _Strategy([False, True], lambda rng: rng.random() < 0.5,
+                     lambda v: (False,) if v else ())
+
+
+def _lists(elements, *, min_size=0, max_size=8):
+    def draw(rng):
+        return [elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))]
+
+    def shrink(v):
+        # structural first: halves, then dropping single elements,
+        # then shrinking elements in place
+        if len(v) > min_size:
+            half = max(min_size, len(v) // 2)
+            if half < len(v):
+                yield list(v[:half])
+                yield list(v[len(v) - half:])
+            for i in range(len(v)):
+                if len(v) - 1 >= min_size:
+                    yield v[:i] + v[i + 1:]
+        for i, item in enumerate(v):
+            for cand in elements.shrink(item):
+                yield v[:i] + [cand] + v[i + 1:]
+
+    edges = [[]] if min_size == 0 else [
+        [elements.edge_values[0]] * min_size]
+    return _Strategy(edges, draw, shrink)
+
+
+#: strategies for state-machine rule arguments.  Deliberately its own
+#: namespace (NOT ``strategies``): with real hypothesis installed
+#: ``strategies`` is hypothesis's and its objects have no ``.draw(rng)`` —
+#: the stateful engine always runs on the fallback machinery so stateful
+#: tests behave identically in both CI matrix legs.
+machine_st = types.SimpleNamespace(
+    integers=_integers, sampled_from=_sampled_from, floats=_floats,
+    booleans=_booleans, lists=_lists)
+
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     from hypothesis import given, settings
@@ -27,105 +163,6 @@ try:  # pragma: no cover - exercised only when hypothesis is installed
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
-
-    import random
-    import types
-
-    DEFAULT_MAX_EXAMPLES = 25
-    MAX_SHRINK_TRIES = 500
-
-    try:
-        from _pytest.outcomes import Skipped as _Skipped
-    except Exception:  # pragma: no cover - pytest always present in CI
-        class _Skipped(BaseException):
-            pass
-
-    #: exceptions that must propagate, never count as falsifying examples
-    #: (Ctrl-C, interpreter exit, pytest.skip control flow)
-    _NON_FALSIFYING = (KeyboardInterrupt, SystemExit, GeneratorExit, _Skipped)
-
-    class _Strategy:
-        """A value source: boundary examples first, then seeded draws, plus
-        a shrinker yielding strictly-simpler candidates for a value."""
-
-        def __init__(self, edge_values, draw, shrink=None):
-            self.edge_values = list(edge_values)
-            self.draw = draw
-            self.shrink = shrink or (lambda value: ())
-
-    def _shrink_number(value, target, *, integer):
-        """Candidates between ``value`` and ``target`` (nearest-to-target
-        first: big jumps before single steps)."""
-        if value == target:
-            return
-        yield target
-        mid = (value + target) // 2 if integer else (value + target) / 2
-        if mid not in (value, target):
-            yield mid
-        if integer:
-            step = value - 1 if value > target else value + 1
-            if step != mid:
-                yield step
-
-    def _integers(min_value=0, max_value=2 ** 31 - 1):
-        target = min(max(0, min_value), max_value)
-        return _Strategy(
-            [min_value, max_value],
-            lambda rng: rng.randint(min_value, max_value),
-            lambda v: _shrink_number(v, target, integer=True))
-
-    def _sampled_from(elements):
-        elems = list(elements)
-
-        def shrink(v):
-            # earlier elements are simpler; try the front first
-            try:
-                i = elems.index(v)
-            except ValueError:
-                return
-            if i > 0:
-                yield elems[0]
-            if i // 2 not in (0, i):
-                yield elems[i // 2]
-
-        return _Strategy(elems[:2],
-                         lambda rng: elems[rng.randrange(len(elems))],
-                         shrink)
-
-    def _floats(min_value=0.0, max_value=1.0, **_kw):
-        target = min(max(0.0, min_value), max_value)
-        return _Strategy(
-            [min_value, max_value],
-            lambda rng: rng.uniform(min_value, max_value),
-            lambda v: _shrink_number(v, target, integer=False))
-
-    def _booleans():
-        return _Strategy([False, True], lambda rng: rng.random() < 0.5,
-                         lambda v: (False,) if v else ())
-
-    def _lists(elements, *, min_size=0, max_size=8):
-        def draw(rng):
-            return [elements.draw(rng)
-                    for _ in range(rng.randint(min_size, max_size))]
-
-        def shrink(v):
-            # structural first: halves, then dropping single elements,
-            # then shrinking elements in place
-            if len(v) > min_size:
-                half = max(min_size, len(v) // 2)
-                if half < len(v):
-                    yield list(v[:half])
-                    yield list(v[len(v) - half:])
-                for i in range(len(v)):
-                    if len(v) - 1 >= min_size:
-                        yield v[:i] + v[i + 1:]
-            for i, item in enumerate(v):
-                for cand in elements.shrink(item):
-                    yield v[:i] + [cand] + v[i + 1:]
-
-        edges = [[]] if min_size == 0 else [
-            [elements.edge_values[0]] * min_size]
-        return _Strategy(edges, draw, shrink)
 
     strategies = types.SimpleNamespace(
         integers=_integers, sampled_from=_sampled_from, floats=_floats,
@@ -205,7 +242,6 @@ except ModuleNotFoundError:
                                   f"{fn.__qualname__}{minimal}")
                             raise exc
                         raise
-
             wrapper.__name__ = fn.__name__
             wrapper.__qualname__ = fn.__qualname__
             wrapper.__doc__ = fn.__doc__
@@ -221,3 +257,149 @@ except ModuleNotFoundError:
             return fn
 
         return deco
+
+
+# ---------------------------------------------------------------------------
+# stateful testing: rule-based state machines with program shrinking
+# ---------------------------------------------------------------------------
+
+def rule(**arg_specs):
+    """Mark a ``RuleBasedStateMachine`` method as a rule.
+
+    Keyword arguments are ``machine_st`` strategies; each executed call of
+    the rule draws fresh values for them.  A method with no arguments is
+    declared with bare ``@rule()``."""
+    def deco(fn):
+        fn._pc_rule_specs = dict(arg_specs)
+        return fn
+
+    return deco
+
+
+class RuleBasedStateMachine:
+    """Base class for stateful property tests (hypothesis.stateful subset).
+
+    Subclasses define ``@rule(...)`` methods mutating/checking ``self``;
+    ``run_state_machine`` executes random programs against fresh instances.
+    An optional ``finalize`` method runs after the last rule of every
+    program — put end-state invariants there so they participate in
+    shrinking (e.g. "merging the worker caches reproduces the reference").
+    """
+
+    @classmethod
+    def _rules(cls) -> dict[str, dict]:
+        out = {}
+        for name in sorted(dir(cls)):
+            specs = getattr(getattr(cls, name), "_pc_rule_specs", None)
+            if specs is not None:
+                out[name] = specs
+        return out
+
+
+def _run_program(cls, program, *, shrinking=False) -> BaseException | None:
+    """One program against a fresh machine; the triggering exception, or
+    None when every rule (and ``finalize``) passed.
+
+    Skips follow the ``given``-fallback's semantics: a ``pytest.skip`` on
+    a *detection* program propagates (the test really is skipped), but on
+    a *shrink candidate* it means "invalid input, keep shrinking" — it
+    must neither mask the original failure nor count as one."""
+    try:
+        machine = cls()
+        for name, kwargs in program:
+            getattr(machine, name)(**kwargs)
+        fin = getattr(machine, "finalize", None)
+        if fin is not None:
+            fin()
+    except (KeyboardInterrupt, SystemExit, GeneratorExit):
+        raise
+    except _Skipped:
+        if shrinking:
+            return None
+        raise
+    except BaseException as e:  # noqa: BLE001 - re-raised by the caller
+        return e
+    return None
+
+
+def _program_candidates(rules, program):
+    """Strictly-simpler variants of a failing program: structural shrinks
+    of the rule sequence first (halves, single-step drops), then per-call
+    argument shrinks."""
+    n = len(program)
+    if n > 1:
+        half = n // 2
+        yield program[:half]
+        yield program[n - half:]
+    for i in range(n):
+        if n > 1:
+            yield program[:i] + program[i + 1:]
+    for i, (name, kwargs) in enumerate(program):
+        for k, spec in sorted(rules[name].items()):
+            for cand in spec.shrink(kwargs[k]):
+                yield (program[:i]
+                       + [(name, {**kwargs, k: cand})]
+                       + program[i + 1:])
+
+
+def _shrink_program(cls, rules, program):
+    """Greedy descent over ``_program_candidates`` (same discipline as
+    ``_shrink_case``): adopt the first simpler program that still fails,
+    repeat until none does or the try budget runs out."""
+    best = list(program)
+    best_exc = None
+    tries = 0
+    improved = True
+    while improved and tries < MAX_SHRINK_TRIES:
+        improved = False
+        for cand in _program_candidates(rules, best):
+            tries += 1
+            exc = _run_program(cls, cand, shrinking=True)
+            if exc is not None:
+                best, best_exc = list(cand), exc
+                improved = True
+                break
+            if tries >= MAX_SHRINK_TRIES:
+                break
+    return best, best_exc
+
+
+def _format_program(program) -> str:
+    return "\n".join(
+        f"  {name}({', '.join(f'{k}={v!r}' for k, v in sorted(kw.items()))})"
+        for name, kw in program)
+
+
+def run_state_machine(cls, *, steps: int = 20, max_examples: int = 10,
+                      seed=None) -> None:
+    """Run ``max_examples`` random programs of 1..``steps`` rule calls
+    against fresh ``cls`` instances; shrink and report the first failure.
+
+    Deterministic: the program RNG is seeded from the machine's qualified
+    name (override with ``seed=``), so a failure reproduces bit-identically
+    run to run — matching the ``given`` fallback's discipline."""
+    rules = cls._rules()
+    if not rules:
+        raise TypeError(f"{cls.__name__} defines no @rule methods")
+    names = sorted(rules)
+    base = (seed if seed is not None
+            else f"propcheck-machine::{cls.__module__}::{cls.__qualname__}")
+    for example in range(max_examples):
+        rng = random.Random(f"{base}::{example}")
+        program = []
+        for _ in range(rng.randint(1, steps)):
+            name = names[rng.randrange(len(names))]
+            kwargs = {k: spec.draw(rng)
+                      for k, spec in sorted(rules[name].items())}
+            program.append((name, kwargs))
+        exc = _run_program(cls, program)
+        if exc is None:
+            continue
+        minimal, mexc = _shrink_program(cls, rules, program)
+        print(f"_propcheck falsifying program ({cls.__name__}):")
+        print(_format_program(program))
+        if mexc is not None and minimal != program:
+            print(f"_propcheck shrunk to ({cls.__name__}):")
+            print(_format_program(minimal))
+            raise mexc
+        raise exc

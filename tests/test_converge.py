@@ -409,6 +409,56 @@ def test_check_regression_converged_gate(tmp_path):
     assert cr.main([noarr, base]) == 1
 
 
+def _parallel_doc(opt_avg, *, jobs=2, dispatched=30, merged=30, solves=30,
+                  hypervolume=1.5, rounds=3):
+    doc = _converged_doc(opt_avg, hits=10, solved=20, points=40)
+    doc["rows"][0].update({"util": 0.8, "frontier": 2,
+                           "hypervolume": hypervolume,
+                           "rounds_run": rounds, "points_evaluated": 40})
+    doc["sim"]["pool"] = {"jobs": jobs, "dispatched": dispatched,
+                          "merged": merged, "worker_solves": solves,
+                          "worker_infeasible": 0}
+    return doc
+
+
+def test_check_regression_parallel_gate(tmp_path):
+    """Both JSONs converged -> the exact-identity parallel gate: any row
+    divergence or missing/short pool counters fails, identical rows pass."""
+    cr = _load_check_regression()
+
+    def write(name, doc):
+        p = tmp_path / name
+        p.write_text(json.dumps(doc))
+        return str(p)
+
+    seq = write("seq.json", _parallel_doc(305.0, jobs=1, dispatched=0,
+                                          merged=0, solves=0))
+    par = write("par.json", _parallel_doc(305.0))
+    assert cr.main([par, seq]) == 0
+    # bit-identity: even an above-tolerance fmax IMPROVEMENT fails
+    better = write("better.json", _parallel_doc(306.0))
+    assert cr.main([better, seq]) == 1
+    # hypervolume divergence fails
+    hv = write("hv.json", _parallel_doc(305.0, hypervolume=1.6))
+    assert cr.main([hv, seq]) == 1
+    # rounds divergence fails
+    rd = write("rd.json", _parallel_doc(305.0, rounds=2))
+    assert cr.main([rd, seq]) == 1
+    # pool metadata must prove subprocess work: jobs < 2 fails...
+    j1 = write("j1.json", _parallel_doc(305.0, jobs=1))
+    assert cr.main([j1, seq]) == 1
+    # ...as do unmerged worker results and dispatches without solves
+    um = write("um.json", _parallel_doc(305.0, merged=29))
+    assert cr.main([um, seq]) == 1
+    ns = write("ns.json", _parallel_doc(305.0, solves=0))
+    assert cr.main([ns, seq]) == 1
+    # missing pool block entirely fails
+    nop = _parallel_doc(305.0)
+    del nop["sim"]["pool"]
+    nopool = write("nopool.json", nop)
+    assert cr.main([nopool, seq]) == 1
+
+
 def _load_check_links():
     path = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -433,5 +483,6 @@ def test_link_checker_resolves_and_fails_correctly(tmp_path):
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     files = [os.path.join(root, "README.md"),
              os.path.join(root, "docs", "architecture.md"),
-             os.path.join(root, "docs", "search-guide.md")]
+             os.path.join(root, "docs", "search-guide.md"),
+             os.path.join(root, "docs", "deployment.md")]
     assert cl.main(files) == 0

@@ -14,8 +14,11 @@ import pytest
 
 # NB: resolved via importlib, not attribute access — ``repro.core.simulate``
 # the *module* is shadowed by ``repro.core.simulate`` the *function* once
-# the package __init__ runs its re-exports.
-MODULES = ("repro.core.explorer", "repro.core.simulate", "repro.fpga.archs")
+# the package __init__ runs its re-exports.  ``repro.core.explorer`` is the
+# backcompat alias of ``repro.search.engine``; listing both proves the alias
+# resolves to a module whose examples still run.
+MODULES = ("repro.search.engine", "repro.search.space", "repro.search.pareto",
+           "repro.core.explorer", "repro.core.simulate", "repro.fpga.archs")
 
 
 @pytest.mark.parametrize("name", MODULES)

@@ -1,0 +1,393 @@
+"""The ``repro.search`` subsystem (PR-5 tentpole): worker-pool parallel
+floorplan solving, mergeable caches/counters, the surrogate proposer, and
+backward compatibility of the old ``repro.core.explorer`` import surface.
+
+Covers: ``jobs=4`` frontier identity with ``jobs=1`` (the parallel path's
+contract is *bit-identical* results), pool survival of worker-side
+``InfeasibleError`` (a verdict, not a crash), ``floorplan_counts()``
+staying correct when solves happen in subprocesses, the
+``FloorplanCache.merge`` property (stateful-machine-tested against
+interleaved single-process solves), the surrogate proposer's
+equal-or-better convergence regression, and the uniform fallback's
+bit-identity when the fit is underdetermined.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _propcheck import RuleBasedStateMachine, machine_st, rule, run_state_machine
+
+import repro.search as search_pkg
+from repro.core import (
+    FloorplanCache,
+    Interval,
+    SearchPoint,
+    SearchSpace,
+    SlotGrid,
+    TaskGraphBuilder,
+    autobridge,
+    floorplan_counts,
+    initial_floorplan_key,
+    merge_floorplan_counts,
+    reset_floorplan_counts,
+)
+from repro.core.ilp import InfeasibleError
+from repro.fpga import benchmarks as B, grid_for, u280_grid
+from repro.search import (
+    PoolStats,
+    ResponseSurface,
+    SurrogateProposer,
+    UniformProposer,
+    explore_design_space,
+    hypervolume,
+    make_proposer,
+    pool_counts,
+    reset_pool_counts,
+    search_until_converged,
+    warm_floorplan_cache,
+)
+from repro.search.engine import _objective
+
+
+def _chain_graph(n=4, width=64, lut=100):
+    b = TaskGraphBuilder("chain")
+    for i in range(n - 1):
+        b.stream(f"s{i}", width=width)
+    for i in range(n):
+        b.invoke(f"K{i}", area={"LUT": lut},
+                 ins=[f"s{i - 1}"] if i > 0 else [],
+                 outs=[f"s{i}"] if i < n - 1 else [])
+    return b.build()
+
+
+def _vecadd():
+    pe = 4
+    b = TaskGraphBuilder("VecAdd")
+    a = b.streams("str_a", n=pe, width=512)
+    bb = b.streams("str_b", n=pe, width=512)
+    c = b.streams("str_c", n=pe, width=512)
+    b.invoke("LoadA", area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+             outs=a, count=pe)
+    b.invoke("LoadB", area={"LUT": 12e3, "BRAM": 30, "hbm_channels": 1},
+             outs=bb, count=pe)
+    b.invoke("Add", area={"LUT": 60e3, "DSP": 256}, ins=a + bb, outs=c,
+             count=pe)
+    b.invoke("Store", area={"LUT": 12e3, "hbm_channels": 1}, ins=c, count=pe)
+    return b.build()
+
+
+def _frontier_fingerprint(res):
+    """Everything observable about a frontier candidate, for exact-identity
+    comparison across execution modes."""
+    return sorted(
+        (dataclasses.astuple(c.point), c.fmax, c.plan.area_overhead,
+         tuple(sorted(c.plan.depth.items())),
+         tuple(sorted(c.plan.floorplan.placement.items())),
+         c.sim.cycles if c.sim else None)
+        for c in res.frontier)
+
+
+# ---------------------------------------------------------------------------
+# backward compatibility: repro.core.explorer -> repro.search
+# ---------------------------------------------------------------------------
+
+
+def test_core_explorer_is_the_search_engine():
+    import repro.core.explorer as explorer_mod
+    import repro.search.engine as engine_mod
+
+    assert explorer_mod is engine_mod
+    assert explorer_mod.explore_design_space is search_pkg.explore_design_space
+    assert explorer_mod.SearchSpace is search_pkg.SearchSpace
+    # the names tests/benchmarks reach into survive the move
+    for name in ("_objective", "_derive_depth_variant", "simulate_batch",
+                 "autobridge", "InfeasibleError", "Interval"):
+        assert hasattr(explorer_mod, name)
+
+
+def test_core_package_reexports_search_names():
+    import repro.core as core
+
+    for name in ("explore_design_space", "search_until_converged",
+                 "sweep_backends", "SearchSpace", "Interval", "hypervolume",
+                 "pareto_frontier", "best_candidate"):
+        assert getattr(core, name) is getattr(search_pkg, name)
+        assert name in core.__all__
+    assert "search_until_converged" in dir(core)
+
+
+# ---------------------------------------------------------------------------
+# worker pool: jobs>1 is bit-identical to jobs=1, only faster
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("design", ["stencil_x4", "bucket_sort", "page_rank"])
+def test_parallel_converged_search_matches_sequential(design):
+    """The acceptance contract on fast-subset designs: jobs=4 returns a
+    frontier identical to jobs=1 — same points, placements, depths, fmax
+    and simulated cycles — with the same hypervolume trajectory."""
+    name, board, graph = next((n, b, g) for n, b, g in B.autobridge_suite()
+                              if n == design)
+    space = SearchSpace(utils=Interval(0.7, 1.0))
+    kwargs = dict(space=space, rounds=2, points_per_round=6,
+                  sim_firings=60, tol=0.0)
+    seq = search_until_converged(graph, grid_for(board), **kwargs)
+    par = search_until_converged(graph, grid_for(board), jobs=4, **kwargs)
+    assert _frontier_fingerprint(par) == _frontier_fingerprint(seq)
+    assert par.hypervolumes == seq.hypervolumes
+    assert par.rounds_run == seq.rounds_run
+    assert par.points_evaluated == seq.points_evaluated
+    assert par.jobs == 4 and seq.jobs == 1
+    assert par.pool is not None and par.pool.merged == par.pool.dispatched
+    assert seq.pool is None
+
+
+def test_parallel_explore_design_space_matches_sequential():
+    graph = _vecadd()
+    grid = u280_grid()
+    space = SearchSpace(seeds=(0, 1), utils=(0.6, 0.7, 0.8),
+                        depth_scales=(1.0, 2.0))
+    seq = explore_design_space(graph, grid, space=space, sim_firings=60)
+    par = explore_design_space(_vecadd(), grid, space=space, sim_firings=60,
+                               jobs=2)
+    assert _frontier_fingerprint(par) == _frontier_fingerprint(seq)
+    assert len(par.candidates) == len(seq.candidates)
+
+
+def test_pool_survives_worker_infeasible_and_merges_counters():
+    """A worker hitting InfeasibleError ships the verdict back as a cached
+    entry: the search completes with failed candidates, and the global
+    floorplan counters see the workers' solve attempts (not the silent 0
+    the per-process globals would otherwise read)."""
+    graph = _chain_graph(n=5, lut=1000)
+    tiny = SlotGrid("tiny", rows=1, cols=2, base_capacity={"LUT": 10},
+                    max_util=1.0)
+    reset_floorplan_counts()
+    reset_pool_counts()
+    res = explore_design_space(graph, tiny,
+                               space=SearchSpace(utils=(0.5, 1.0)),
+                               jobs=2)
+    assert res.frontier == []
+    assert all(c.plan is None and c.error for c in res.candidates)
+    counts = floorplan_counts()
+    assert counts["solved"] > 0          # merged in from the workers
+    assert counts["ilp_bipartitions"] > 0
+    pc = pool_counts()
+    assert pc["dispatched"] == pc["merged"] == 2
+    assert pc["worker_infeasible"] == 2
+
+
+def test_warm_cache_skips_already_cached_points():
+    graph = _chain_graph()
+    grid = SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 200},
+                    max_util=1.0)
+    cache = FloorplanCache()
+    pts = [SearchPoint(max_util=0.9), SearchPoint(max_util=1.0)]
+    first = warm_floorplan_cache(graph, grid, pts, cache=cache, jobs=2)
+    assert first.dispatched == 2 and first.merged == 2
+    again = warm_floorplan_cache(graph, grid, pts, cache=cache, jobs=2)
+    assert again.dispatched == 0         # everything already cached
+    # jobs=1 is the exact in-process fallback: the pool never spins up
+    seq = warm_floorplan_cache(graph, grid, pts, cache=FloorplanCache(),
+                               jobs=1)
+    assert seq.dispatched == 0 and seq.jobs == 1
+
+
+def test_initial_floorplan_key_matches_autobridge_first_solve():
+    graph = _chain_graph()
+    grid = SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 200},
+                    max_util=1.0)
+    cache = FloorplanCache()
+    autobridge(graph, grid, max_util=0.9, seed=1, depth_scale=2.0,
+               cache=cache)
+    key = initial_floorplan_key(graph, grid, max_util=0.9, seed=1,
+                                depth_scale=2.0)
+    assert key in cache
+    assert initial_floorplan_key(graph, grid, max_util=0.8, seed=1) not in cache
+
+
+def test_merge_floorplan_counts_aggregates():
+    reset_floorplan_counts()
+    merge_floorplan_counts({"solved": 3, "cache_hits": 2,
+                            "ilp_bipartitions": 7})
+    merge_floorplan_counts({"solved": 1})
+    c = floorplan_counts()
+    assert (c["solved"], c["cache_hits"], c["ilp_bipartitions"]) == (4, 2, 7)
+
+
+def test_pool_stats_absorb():
+    a = PoolStats(jobs=2, dispatched=3, merged=3, worker_solves=5,
+                  worker_infeasible=1, wall_s=0.5)
+    b = PoolStats(jobs=4, dispatched=2, merged=2, worker_solves=2,
+                  wall_s=0.25)
+    a.absorb(b)
+    assert (a.jobs, a.dispatched, a.merged, a.worker_solves,
+            a.worker_infeasible) == (4, 5, 5, 7, 1)
+    assert a.wall_s == pytest.approx(0.75)
+    assert set(a.as_dict()) == {"jobs", "dispatched", "merged",
+                                "worker_solves", "worker_infeasible",
+                                "wall_s"}
+
+
+# ---------------------------------------------------------------------------
+# FloorplanCache.merge: property-tested against interleaved solves
+# ---------------------------------------------------------------------------
+
+
+class CacheMergeMachine(RuleBasedStateMachine):
+    """Interleave autobridge solves across two 'worker' caches while a
+    reference cache sees every solve (the single-process interleaving).
+    Merging the workers into a fresh parent must reproduce the reference:
+    same keys, same plans/verdicts, and replaying any solved configuration
+    on the parent is a pure hit."""
+
+    GRID = SlotGrid("g", rows=2, cols=2, base_capacity={"LUT": 400},
+                    max_util=1.0)
+
+    def __init__(self):
+        self.workers = [FloorplanCache(), FloorplanCache()]
+        self.reference = FloorplanCache()
+        self.configs: list[tuple] = []
+
+    @rule(w=machine_st.integers(0, 1),
+          n=machine_st.integers(3, 6),
+          seed=machine_st.integers(0, 2),
+          util=machine_st.sampled_from([0.02, 0.9, 1.0]))
+    def solve(self, w, n, seed, util):
+        # util=0.02 caps every slot below one task -> cached infeasibility
+        def run(cache):
+            try:
+                plan = autobridge(_chain_graph(n=n), self.GRID, seed=seed,
+                                  max_util=util, cache=cache)
+                return ("ok", tuple(sorted(plan.floorplan.placement.items())),
+                        tuple(sorted(plan.depth.items())))
+            except InfeasibleError as e:
+                return ("err", str(e))
+
+        got = run(self.workers[w])
+        want = run(self.reference)
+        assert got == want       # worker solve ≡ single-process solve
+        self.configs.append((n, seed, util))
+
+    def finalize(self):
+        parent = FloorplanCache()
+        added = sum(parent.merge(wc) for wc in self.workers)
+        assert added == len(parent)
+        assert set(parent._entries) == set(self.reference._entries)
+        for k, (kind, val) in parent._entries.items():
+            rkind, rval = self.reference._entries[k]
+            assert kind == rkind
+            if kind == "ok":
+                assert val.placement == rval.placement
+                assert val.cost == pytest.approx(rval.cost)
+            else:
+                assert val == rval
+        # replaying every recorded configuration on the merged parent never
+        # solves again: pure hits (misses stay 0)
+        for n, seed, util in self.configs:
+            try:
+                autobridge(_chain_graph(n=n), self.GRID, seed=seed,
+                           max_util=util, cache=parent)
+            except InfeasibleError:
+                pass
+        assert parent.misses == 0
+        assert parent.hits >= len(self.configs)
+
+
+def test_floorplan_cache_merge_property():
+    run_state_machine(CacheMergeMachine, steps=6, max_examples=5)
+
+
+def test_floorplan_cache_merge_first_writer_wins_and_counts():
+    g = _chain_graph()
+    grid = SlotGrid("g", rows=1, cols=2, base_capacity={"LUT": 300},
+                    max_util=1.0)
+    a, b = FloorplanCache(), FloorplanCache()
+    autobridge(g, grid, cache=a)
+    autobridge(_chain_graph(), grid, cache=b)          # same key, own solve
+    autobridge(g, grid, seed=1, cache=b)               # b-only entry
+    parent = FloorplanCache()
+    assert parent.merge(a) == 1
+    assert parent.merge(b) == 1                        # dup key not re-added
+    assert len(parent) == 2
+    # merge does not rewrite lookup history
+    assert parent.hits == parent.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# surrogate proposer
+# ---------------------------------------------------------------------------
+
+
+def test_response_surface_recovers_quadratic():
+    pts = [SearchPoint(max_util=u, depth_scale=d)
+           for u in (0.5, 0.6, 0.7, 0.8, 0.9, 1.0)
+           for d in (1.0, 1.5, 2.0)]
+    y = np.array([[2.0 + 3.0 * p.max_util - 1.5 * p.max_util ** 2
+                   + 0.5 * p.depth_scale] for p in pts])
+    rs = ResponseSurface(ridge=1e-10)
+    assert rs.fit(pts, y)
+    pred = rs.predict([SearchPoint(max_util=0.65, depth_scale=1.2)])
+    want = 2.0 + 3.0 * 0.65 - 1.5 * 0.65 ** 2 + 0.5 * 1.2
+    assert pred[0, 0] == pytest.approx(want, rel=1e-4)
+
+
+def test_response_surface_underdetermined_refuses():
+    rs = ResponseSurface()
+    ok = rs.fit([SearchPoint(max_util=0.6), SearchPoint(max_util=0.7)],
+                np.array([[1.0], [2.0]]))
+    # two samples cannot determine bias+linear+quadratic in one axis
+    assert not ok
+    with pytest.raises(RuntimeError):
+        rs.predict([SearchPoint()])
+
+
+def test_surrogate_fallback_is_bit_identical_to_uniform():
+    """With no evaluated candidates the fit is underdetermined and the
+    surrogate must propose EXACTLY the uniform draws — the fallback is the
+    uniform proposer, not merely 'something random'.  That must hold on
+    continuous AND discrete spaces (a discrete space's oversampled pool
+    degenerates to grid order, which is NOT the uniform draw)."""
+    cont = SearchSpace(utils=Interval(0.6, 0.9), depth_scales=(1.0, 2.0))
+    disc = SearchSpace(utils=(0.6, 0.7, 0.8, 0.85, 0.9),
+                       depth_scales=(1.0, 2.0))
+    for space in (cont, disc):
+        for seed in (0, 42):
+            uni = UniformProposer().propose(space, [], [], 6, seed=seed)
+            sur = SurrogateProposer().propose(space, [], [], 6, seed=seed)
+            assert sur == uni
+
+
+def test_make_proposer_resolves_names_and_objects():
+    assert isinstance(make_proposer("uniform"), UniformProposer)
+    assert isinstance(make_proposer("surrogate"), SurrogateProposer)
+    custom = SurrogateProposer(oversample=4)
+    assert make_proposer(custom) is custom
+    with pytest.raises(ValueError):
+        make_proposer("genetic")
+
+
+@pytest.mark.parametrize("case", ["vecadd", "page_rank"])
+def test_surrogate_converges_no_slower_at_equal_or_better_hypervolume(case):
+    """The regression-tested acceptance: on these pinned designs the
+    surrogate proposer converges in <= the uniform proposer's rounds and
+    its merged frontier's hypervolume (common reference) is >= uniform's."""
+    if case == "vecadd":
+        graph, grid = _vecadd(), u280_grid()
+    else:
+        _, board, graph = next((n, b, g) for n, b, g in B.autobridge_suite()
+                               if n == case)
+        grid = grid_for(board)
+    space = SearchSpace(utils=Interval(0.6, 0.95), depth_scales=(1.0, 2.0))
+    kwargs = dict(space=space, rounds=4, points_per_round=10,
+                  sim_firings=100, tol=0.01)
+    uni = search_until_converged(graph, grid, **kwargs)
+    sur = search_until_converged(graph, grid, proposer="surrogate", **kwargs)
+    assert sur.proposer == "surrogate" and uni.proposer == "uniform"
+    assert sur.rounds_run <= uni.rounds_run
+    ref = tuple(min(min(_objective(c)[i] for c in r.frontier)
+                    for r in (uni, sur)) - 1.0 for i in range(3))
+    hv_uni = hypervolume([_objective(c) for c in uni.frontier], ref)
+    hv_sur = hypervolume([_objective(c) for c in sur.frontier], ref)
+    assert hv_sur >= hv_uni - 1e-9
