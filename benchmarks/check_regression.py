@@ -30,6 +30,13 @@ regress beyond tolerance:
   ``--tol`` relative to baseline; every baseline design must still be
   present; the vectorization gate always applies (the throughput suite is
   itself the CI fast suite).
+* both suites: any run with a ``sim`` block must also record the static
+  pre-flight counters (``sim.analysis`` from ``repro.analysis``) with
+  ``analyzed > 0`` — an absent or all-zero block means the verifier gate
+  silently stopped running.  If the gate *skipped* candidates
+  (``analysis.skipped > 0``) in a like-for-like comparison, every
+  per-design frontier size must match the baseline exactly: skipping is
+  only sound when it provably cannot move the frontier.
 
 Usage:
     python benchmarks/check_regression.py CURRENT.json BASELINE.json [--tol 0.02]
@@ -118,6 +125,49 @@ def check_converged_sim(cur: dict, *, label: str) -> list[str]:
     return errors
 
 
+def check_analysis(cur: dict, base: dict, *, label: str) -> list[str]:
+    """The static pre-flight verifier's own gate (``repro.analysis``).
+
+    A run that simulated anything must show the analyzer actually ran
+    (``sim.analysis.analyzed > 0`` — the vacuous all-zero pass is closed,
+    mirroring ``check_sim``'s one-array-sweep rule).  When the gate
+    skipped statically-doomed candidates, the analyzer's soundness
+    contract says only provably-dead work was removed, so in a
+    like-for-like comparison (same converge mode on both sides) every
+    per-design frontier size must still match the baseline exactly."""
+    sim = cur.get("sim")
+    if sim is None:
+        return []
+    errors = []
+    ana = sim.get("analysis")
+    if not ana or not ana.get("analyzed", 0):
+        errors.append(
+            f"{label} records no static-analysis activity "
+            f"(sim.analysis.analyzed is 0 or missing; the pre-flight "
+            f"verifier gate silently stopped running)"
+        )
+        return errors
+    if ana.get("skipped", 0) and cur.get("converge") == base.get("converge"):
+        cur_rows = {_row_key(r): r for r in cur["rows"]}
+        for r in base["rows"]:
+            got = cur_rows.get(_row_key(r))
+            if got is None or "frontier" not in r:
+                continue
+            if got.get("frontier") != r.get("frontier"):
+                errors.append(
+                    f"design {_row_key(r)} frontier size changed "
+                    f"{r.get('frontier')!r} -> {got.get('frontier')!r} in a "
+                    f"run where the static gate skipped "
+                    f"{ana['skipped']} candidate(s) — skipping must not "
+                    f"move the frontier"
+                )
+    return errors
+
+
+def _row_key(row: dict):
+    return (row["name"], row["board"]) if "board" in row else row["name"]
+
+
 #: converged-row fields the parallel run must reproduce bit-identically
 PARALLEL_IDENTITY_FIELDS = (
     "opt_mhz",
@@ -202,6 +252,7 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
         errors += check_converged_sim(cur, label="converged run")
     elif cur.get("subset"):
         errors += check_sim(cur, label="fast subset")
+    errors += check_analysis(cur, base, label="fmax suite")
     cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
     for r in base["rows"]:
         key = (r["name"], r["board"])
@@ -216,6 +267,7 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
 def check_throughput(cur: dict, base: dict, tol: float) -> list[str]:
     # the throughput suite IS the CI fast suite: always gate vectorization
     errors = check_sim(cur, label="throughput suite")
+    errors += check_analysis(cur, base, label="throughput suite")
     cur_rows = {r["name"]: r for r in cur["rows"]}
     for r in base["rows"]:
         name = r["name"]

@@ -49,6 +49,7 @@ import argparse
 import json
 import time
 
+from repro.analysis import analysis_counts, reset_analysis_counts
 from repro.core import (FloorplanCache, InfeasibleError, Interval,
                         SearchPoint, SearchSpace, analyze_timing,
                         engine_counts, floorplan_counts, packed_placement,
@@ -208,6 +209,7 @@ def summarize(rows: list[dict]) -> dict:
 def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
          subset: tuple[str, ...] | None = None,
          json_path: str | None = None) -> list[dict]:
+    reset_analysis_counts()
     entries = [prepare(name, board, graph)
                for name, board, graph in B.autobridge_suite()
                if subset is None or name in subset]
@@ -262,6 +264,7 @@ def main_converged(verbose: bool = True,
     reset_engine_counts()
     reset_floorplan_counts()
     reset_pool_counts()
+    reset_analysis_counts()
     cache = FloorplanCache()
     t0 = time.monotonic()
     rows = []
@@ -280,9 +283,11 @@ def main_converged(verbose: bool = True,
                   f"points={r['points_evaluated']}")
     fp = floorplan_counts()
     pool = {"jobs": jobs, **pool_counts()}
+    ana = analysis_counts()
     sim_meta = {"firings": sim_firings, "mode": "converged",
                 "counts": engine_counts(), "floorplan": fp,
                 "cache": cache.stats(), "pool": pool,
+                "analysis": ana,
                 "proposer": proposer,
                 "points_evaluated": sum(r["points_evaluated"] for r in rows),
                 "wall_s": time.monotonic() - t0}
@@ -298,6 +303,9 @@ def main_converged(verbose: bool = True,
           f"dispatched={pool['dispatched']} merged={pool['merged']} "
           f"worker_solves={pool['worker_solves']} "
           f"search_wall={sim_meta['wall_s']:.2f}s")
+    print(f"fmax_suite,ANALYSIS,0,analyzed={ana['analyzed']} "
+          f"doomed={ana['doomed']} skipped={ana['skipped']} "
+          f"infeasible={ana['infeasible']}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "fmax_suite", "converge": True,

@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.analysis import reset_analysis_counts
 from repro.core import (SearchSpace, prepare_design_space,
                         timed_pool_simulations)
 from repro.fpga import benchmarks as B, u250_grid, u280_grid
@@ -24,6 +25,7 @@ DEFAULT_FIRINGS = 300
 
 
 def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None):
+    reset_analysis_counts()
     designs = [
         ("cnn_13x4", B.cnn(4), u250_grid()),
         ("gaussian_12", B.gaussian(12), u250_grid()),

@@ -139,6 +139,19 @@ class FloorplanCache:
         return {"entries": len(self._entries), "hits": self.hits,
                 "misses": self.misses}
 
+    def record_infeasible(self, key: tuple, reason: str) -> None:
+        """Pre-seed an infeasibility verdict under ``key`` (first writer
+        wins, like ``merge``).  ``autobridge(check=True)`` and the worker
+        pool use this to cache *static-analysis* verdicts so a doomed
+        configuration is never re-analyzed — a later ``solve()`` or check
+        under the same key raises the cached ``InfeasibleError``."""
+        self._entries.setdefault(key, ("err", reason))
+
+    def cached_error(self, key: tuple) -> str | None:
+        """The cached infeasibility reason under ``key``, if any."""
+        hit = self._entries.get(key)
+        return hit[1] if hit is not None and hit[0] == "err" else None
+
     def merge(self, other: "FloorplanCache") -> int:
         """Adopt ``other``'s entries (a worker's cache shipped back from a
         subprocess); returns the number of entries actually added.
@@ -282,13 +295,41 @@ def autobridge(graph: TaskGraph, grid: SlotGrid, *,
                row_weight: float = 1.0,
                col_weight: float = 1.0,
                depth_scale: float = 1.0,
-               cache: FloorplanCache | None = None) -> Plan:
+               cache: FloorplanCache | None = None,
+               check: bool = False) -> Plan:
     # co-optimization knobs beyond max-util (joint design-space search,
     # §6.3 generalized): realized as a scaled working grid, so the whole
     # floorplan->pipeline->balance chain sees consistent weights/depths.
     grid = grid.with_knobs(row_weight=row_weight, col_weight=col_weight,
                            depth_scale=depth_scale)
     util = grid.max_util if max_util is None else max_util
+
+    if check:
+        # Pre-flight structural verification (repro.analysis): a graph with
+        # dangling streams / impossible pins can never floorplan — raise
+        # (and cache) the verdict instead of burning an ILP solve.  Lazy
+        # import: repro.analysis imports repro.core, so a module-level
+        # import here would be circular.
+        from repro.analysis import analyze
+        from repro.analysis.report import _ANALYSIS_COUNTS
+        key = None
+        if cache is not None:
+            key = FloorplanCache.key(graph, grid, max_util=util,
+                                     same_slot=[set(g) for g in same_slot],
+                                     seed=seed,
+                                     exact_threshold=exact_threshold,
+                                     n_starts=n_starts,
+                                     time_limit_s=time_limit_s)
+            cached = cache.cached_error(key)
+            if cached is not None and cached.startswith("static analysis"):
+                raise InfeasibleError(cached)   # verdict cached: no re-run
+        rep = analyze(graph, grid=grid, passes=("structure",))
+        if not rep.ok:
+            msg = f"static analysis: {rep.error_summary()}"
+            _ANALYSIS_COUNTS["infeasible"] += 1
+            if cache is not None:
+                cache.record_infeasible(key, msg)
+            raise InfeasibleError(msg)
 
     def _floorplan(groups: list[set[str]]) -> Floorplan:
         if cache is not None:

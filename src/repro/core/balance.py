@@ -130,7 +130,7 @@ def balance_latencies(edges: list[tuple[str, str, str, int, float]],
     G = nx.DiGraph()
     for n in nodes:
         G.add_node(n, demand=-c[n])
-    for name, s, d, lat, w in edges:
+    for name, s, d, lat, _w in edges:
         m = ("__mid__", name)
         G.add_node(m, demand=0)
         G.add_edge(s, m, weight=-int(lat) * K)
@@ -139,7 +139,7 @@ def balance_latencies(edges: list[tuple[str, str, str, int, float]],
     try:
         flow_cost, flow = nx.network_simplex(G)
     except nx.NetworkXUnbounded:
-        raise _find_cycle(edges)
+        raise _find_cycle(edges) from None
 
     # Residual graph: forward arcs always (cost w), backward when f > 0.
     R = nx.DiGraph()
@@ -159,7 +159,7 @@ def balance_latencies(edges: list[tuple[str, str, str, int, float]],
     try:
         dist = nx.single_source_bellman_ford_path_length(R, src)
     except nx.NetworkXUnbounded:      # defensive: residual negative cycle
-        raise _find_cycle(edges)
+        raise _find_cycle(edges) from None
 
     S = {n: int(round(dist[n] / K)) for n in nodes}
     # normalize each weakly-connected component to min 0
@@ -193,7 +193,7 @@ def _positive_lat_cycle(edges) -> list[str] | None:
     SDC-infeasibility witness), or None.  One Bellman-Ford negative-cycle
     search from a super-source reaching every vertex."""
     H = nx.DiGraph()
-    for name, s, d, lat, w in edges:
+    for _name, s, d, lat, _w in edges:
         # keep the max-latency arc per pair for detection purposes
         if H.has_edge(s, d):
             H[s][d]["weight"] = min(H[s][d]["weight"], -lat)
@@ -219,7 +219,7 @@ def _find_cycle(edges) -> CycleError:
     # fallback: any directed cycle (all-zero-latency cycles are feasible, so
     # reaching here means numeric trouble; report any cycle)
     H = nx.DiGraph()
-    for name, s, d, lat, w in edges:
+    for _name, s, d, _lat, _w in edges:
         H.add_edge(s, d)
     try:
         cyc = [u for u, _ in nx.find_cycle(H)]

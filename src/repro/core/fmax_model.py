@@ -124,7 +124,7 @@ def _design_frac(graph: TaskGraph, grid: SlotGrid) -> float:
 def analyze_timing(graph: TaskGraph, grid: SlotGrid,
                    placement: dict[str, tuple[int, int]] | Placement,
                    pipeline_lat: dict[str, int] | None = None,
-                   model: PhysicalModel = PhysicalModel(), *,
+                   model: PhysicalModel | None = None, *,
                    buffer_bits: Mapping[str, float] | None = None,
                    ) -> TimingReport:
     """Fmax/routability of a placed (optionally pipelined) design.
@@ -138,6 +138,7 @@ def analyze_timing(graph: TaskGraph, grid: SlotGrid,
     lowers these charges, and therefore never scores a lower fmax than
     the uniform-headroom design (the charge is monotone in bits).
     """
+    model = model or PhysicalModel()
     if isinstance(placement, Placement):
         slots_of = placement.slots
         straddle = placement.straddle
@@ -206,7 +207,7 @@ def analyze_timing(graph: TaskGraph, grid: SlotGrid,
 
     # ---- timing -------------------------------------------------------------
     worst = 0.0
-    for slot, u in utils.items():
+    for u in utils.values():
         worst = max(worst, model.local_delay(u))
     # monolithic kernels carry long internal paths HLS cannot retime well
     # (paper 7.3: "avoid designing very large kernels")
@@ -217,7 +218,7 @@ def analyze_timing(graph: TaskGraph, grid: SlotGrid,
             u_task = t.area.get("LUT", 0.0) / cap
             worst = max(worst, model.t0_ns + model.alpha_ns * u_task)
     # straddling kernels: unregistered internal nets cross the interposer
-    for name, frac_over in straddle.items():
+    for name in straddle:
         slot = slots_of[name]
         d = model.local_delay(utils.get(slot, 0.0))
         d += grid.row_boundaries[min(slot[0], grid.rows - 2)].delay_ns \
@@ -242,9 +243,10 @@ def analyze_timing(graph: TaskGraph, grid: SlotGrid,
 
 
 def packed_placement(graph: TaskGraph, grid: SlotGrid,
-                     model: PhysicalModel = PhysicalModel()) -> Placement:
+                     model: PhysicalModel | None = None) -> Placement:
     """Baseline-flow placement: BFS from IO-pinned tasks, packing each slot
     to ``pack_util`` before spilling; almost-fitting tasks straddle."""
+    model = model or PhysicalModel()
     order: list[str] = []
     seen: set[str] = set()
     roots = sorted(graph.tasks, key=lambda n: (graph.tasks[n].pinned is None, n))

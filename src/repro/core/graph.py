@@ -97,11 +97,30 @@ class TaskGraph:
         self.tasks[task.name] = task
         return task
 
-    def add_stream(self, stream: Stream) -> Stream:
+    def add_stream(self, stream: Stream, *, validate: bool = True) -> Stream:
+        """Attach a stream; rejects malformed ones at construction time.
+
+        ``validate=False`` is the escape hatch for tests that deliberately
+        build broken graphs (self-loops, zero-capacity FIFOs) — the static
+        verifier (``repro.analysis``) flags such pre-existing graphs with
+        the same conditions as error diagnostics."""
         if stream.src not in self.tasks or stream.dst not in self.tasks:
             raise ValueError(
                 f"stream {stream.name!r} connects unknown task "
                 f"({stream.src!r} -> {stream.dst!r})")
+        if validate:
+            if stream.src == stream.dst:
+                raise ValueError(
+                    f"stream {stream.name!r} is a self-loop on "
+                    f"{stream.src!r}")
+            if stream.width <= 0:
+                raise ValueError(
+                    f"stream {stream.name!r} has non-positive width "
+                    f"{stream.width!r}")
+            if stream.depth <= 0:
+                raise ValueError(
+                    f"stream {stream.name!r} has non-positive depth "
+                    f"{stream.depth!r} (its producer could never write)")
         idx = len(self.streams)
         self.streams.append(stream)
         self._out[stream.src].append(idx)

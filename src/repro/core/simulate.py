@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from collections import deque
 from typing import Mapping, Sequence
 
@@ -126,6 +127,28 @@ def reset_engine_counts() -> None:
 def engine_counts() -> dict[str, int]:
     """Snapshot of engine invocations since the last reset."""
     return dict(_ENGINE_INVOCATIONS)
+
+
+def _static_check(graph: TaskGraph, mode: str, *, firings: int,
+                  latency=None, extra_capacity=None, ii=None):
+    """Pre-flight ``analyze()`` run for ``simulate(check=...)``.
+
+    Imported lazily: ``repro.analysis`` imports ``repro.core.graph`` (and
+    thereby this module, via the package __init__), so a module-level
+    import here would be circular."""
+    if mode not in ("warn", "raise"):
+        raise ValueError(f"check must be None, 'warn' or 'raise', "
+                         f"got {mode!r}")
+    from repro.analysis import StaticAnalysisError, analyze
+    rep = analyze(graph, latency=latency, extra_capacity=extra_capacity,
+                  ii=ii, firings=firings)
+    if rep.ok:
+        return rep
+    msg = f"static analysis of {graph.name!r} failed: {rep.error_summary()}"
+    if mode == "raise":
+        raise StaticAnalysisError(msg, rep)
+    warnings.warn(msg, stacklevel=3)
+    return rep
 
 
 def pipeline_headroom(latency: Mapping[str, int]) -> dict[str, int]:
@@ -369,12 +392,12 @@ def _simulate_cycle(m: _Model, *, firings: int, max_cycles: int) -> SimResult:
         cycle += 1
         in_flight = (any(q and q[0] > cycle - 1 for q in queues.values())
                      or any(next_free[n] > cycle - 1 for n in names))
-        if not progressed and not in_flight:
-            # nothing fired, nothing in flight, no II wait => deadlock
-            if not all(fired[n] >= want[n] for n in names
-                       if not m.detached[n]):
-                return SimResult(cycles=cycle, fired=fired, deadlocked=True,
-                                 steps=cycle, engine="cycle")
+        # nothing fired, nothing in flight, no II wait => deadlock
+        if (not progressed and not in_flight
+                and not all(fired[n] >= want[n] for n in names
+                            if not m.detached[n])):
+            return SimResult(cycles=cycle, fired=fired, deadlocked=True,
+                             steps=cycle, engine="cycle")
     return SimResult(cycles=cycle, fired=fired,
                      deadlocked=not all(fired[n] >= want[n] for n in names
                                         if not m.detached[n]),
@@ -391,7 +414,8 @@ def simulate(graph: TaskGraph, *, firings: int,
              ii: dict[str, int] | None = None,
              max_cycles: int | None = None,
              engine: str = "event",
-             profile: bool = False) -> SimResult:
+             profile: bool = False,
+             check: str | None = None) -> SimResult:
     """Run until every non-detached task fired ``firings`` times.
 
     latency[s]        — pipeline registers on stream s (default 0)
@@ -405,7 +429,16 @@ def simulate(graph: TaskGraph, *, firings: int,
     profile           — attach per-stream ``StreamProfile`` occupancy/stall
                         histograms to the result (event engine only; derived
                         from the push/pop logs, so near-free)
+    check             — pre-flight static verification (``repro.analysis``)
+                        under the same knobs: ``"warn"`` emits a warning
+                        per failed graph, ``"raise"`` raises
+                        ``StaticAnalysisError`` (carrying the ``Report``)
+                        instead of running a doomed simulation.  ``None``
+                        (default) skips the analyzer entirely.
     """
+    if check is not None:
+        _static_check(graph, check, firings=firings, latency=latency,
+                      extra_capacity=extra_capacity, ii=ii)
     max_cycles = max_cycles or firings * 64 + 10_000
     m = _Model(graph, latency, extra_capacity, ii)
     if engine == "event":
@@ -453,8 +486,8 @@ def _job_bytes_estimate(jobs: Sequence[SimJob]) -> int:
 def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
                    max_cycles: int | None = None,
                    backend: str = "auto",
-                   max_bytes: int | None = DEFAULT_MAX_BYTES
-                   ) -> list[SimResult]:
+                   max_bytes: int | None = DEFAULT_MAX_BYTES,
+                   check: str | None = None) -> list[SimResult]:
     """Simulate many (graph, latency, capacity, II) variants.
 
     ``jobs`` is a sequence of ``SimJob`` (bare ``TaskGraph``s are promoted
@@ -480,6 +513,9 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
               are identical to the unchunked run, and each chunk counts
               one ``numpy`` engine invocation in ``engine_counts()`` —
               i.e. the counters report the chunk count.
+    check   — pre-flight static verification per job (``repro.analysis``),
+              same semantics as ``simulate(check=...)``: ``"warn"`` or
+              ``"raise"``; ``None`` (default) skips the analyzer.
 
     The common cases: a fixed-topology floorplan sweep is one group (no
     padding waste); a cross-design benchmark table or a multi-device
@@ -508,6 +544,11 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
                           for j in jobs]
     if not norm:
         return []
+    if check is not None:
+        for j in norm:
+            _static_check(j.graph, check, firings=firings,
+                          latency=j.latency, extra_capacity=j.extra_capacity,
+                          ii=j.ii)
     if backend not in ("auto", "event", "numpy"):
         raise ValueError(f"unknown backend {backend!r}")
     if backend == "numpy" and _np is None:

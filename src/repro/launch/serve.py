@@ -54,7 +54,7 @@ def main():
     out = []
     t0 = time.time()
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for i in range(args.gen):
+    for _ in range(args.gen):
         out.append(tok)
         logits, cache = step_fn(params, cache, tok)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

@@ -246,16 +246,59 @@ class DeferredSearch:
     base_sim: SimResult | None = None
     #: worker-pool activity of the preparation phase (None when ``jobs=1``)
     pool: PoolStats | None = None
+    #: run the static pre-flight gate before simulating candidates
+    #: (``prepare_design_space(static_check=...)``)
+    static_check: bool = True
 
     @property
     def feasible(self) -> list[Candidate]:
         return [c for c in self.candidates if c.plan is not None]
 
+    def _pending(self) -> list[Candidate]:
+        """Feasible candidates still awaiting a simulation result (the
+        static gate stamps doomed candidates' ``sim`` up front, so they
+        drop out of the job list here)."""
+        return [c for c in self.candidates
+                if c.plan is not None and c.sim is None]
+
+    def apply_static_gate(self, firings: int) -> int:
+        """Statically verify every pending candidate's *as-simulated* graph
+        variant (``repro.analysis`` deadlock pass over the plan's graph —
+        including any cycle-breaking stream demotions — at the plan's FIFO
+        headroom) and skip the simulation of provably-doomed ones.
+
+        A skipped candidate gets a synthetic ``SimResult`` with
+        ``deadlocked=True`` and ``engine="static"`` — by the soundness of
+        the analyzer (a doomed verdict implies the event engine deadlocks)
+        this is exactly the verdict the skipped simulation would have
+        produced, so the Pareto frontier is bit-identical to the ungated
+        path while the doomed candidates' simulations never run.  Returns
+        the number of candidates skipped (also accumulated into
+        ``analysis_counts()['skipped']``)."""
+        if not self.static_check or not firings:
+            return 0
+        from repro.analysis import analyze
+        from repro.analysis.report import _ANALYSIS_COUNTS
+        skipped = 0
+        for c in self._pending():
+            job = c.plan.sim_job()
+            rep = analyze(job.graph, extra_capacity=job.extra_capacity,
+                          firings=firings, passes=("deadlock",))
+            if rep.deadlock:
+                c.sim = SimResult(
+                    cycles=0, fired={n: 0 for n in job.graph.tasks},
+                    deadlocked=True, steps=0, engine="static")
+                c.error = ("static deadlock: "
+                           + "; ".join(d.message for d in rep.errors))
+                skipped += 1
+        _ANALYSIS_COUNTS["skipped"] += skipped
+        return skipped
+
     def sim_jobs(self) -> list[SimJob]:
         """The shared unpipelined baseline (omitted when ``base_sim`` is
-        already known) followed by one job per feasible candidate (empty
-        when there is nothing to simulate)."""
-        feas = self.feasible
+        already known) followed by one job per pending feasible candidate
+        (empty when there is nothing left to simulate)."""
+        feas = self._pending()
         if not feas:
             return []
         jobs = [c.plan.sim_job() for c in feas]
@@ -267,7 +310,7 @@ class DeferredSearch:
         """Distribute ``simulate_batch`` results produced from
         ``sim_jobs()`` (same order: baseline first unless ``base_sim``
         was supplied up front)."""
-        feas = self.feasible
+        feas = self._pending()
         if not feas:
             return
         if self.base_sim is None:
@@ -296,6 +339,8 @@ def pool_simulations(preps: Sequence[DeferredSearch], *,
     jobs: list[SimJob] = []
     spans: list[tuple[int, int]] = []
     for prep in preps:
+        prep.apply_static_gate(firings)
+    for prep in preps:
         pj = prep.sim_jobs()
         spans.append((len(jobs), len(jobs) + len(pj)))
         jobs.extend(pj)
@@ -313,8 +358,13 @@ def timed_pool_simulations(preps: Sequence[DeferredSearch], *,
     resets the global engine counters, times the batched call, and returns
     ``(results, meta)`` where ``meta`` is the JSON-ready dict every
     ``BENCH_*.json`` writer stores under its top-level ``"sim"`` key —
-    ``{firings, jobs, invocations, counts, backends, wall_s}`` — and the
-    CI regression gate inspects to prove the suite stayed vectorized."""
+    ``{firings, jobs, invocations, counts, backends, wall_s, analysis}`` —
+    and the CI regression gate inspects to prove the suite stayed
+    vectorized (and, via ``analysis``, that the static pre-flight gate
+    actually ran).  ``analysis`` is a *snapshot* of ``analysis_counts()``,
+    not a delta: drivers reset the counters up front so the snapshot also
+    covers the preparation phase's ``autobridge(check=True)`` verdicts."""
+    from repro.analysis import analysis_counts
     reset_engine_counts()
     t0 = time.monotonic()
     results = pool_simulations(preps, firings=firings)
@@ -323,7 +373,8 @@ def timed_pool_simulations(preps: Sequence[DeferredSearch], *,
     meta = {"firings": firings, "jobs": len(results),
             "invocations": sum(counts.values()), "counts": counts,
             "backends": sorted({r.engine for r in results}),
-            "wall_s": wall}
+            "wall_s": wall,
+            "analysis": analysis_counts()}
     return results, meta
 
 
@@ -333,11 +384,12 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
                          n_samples: int = 64,
                          sample_seed: int = 0,
                          points: Sequence[SearchPoint] | None = None,
-                         model: PhysicalModel = PhysicalModel(),
+                         model: PhysicalModel | None = None,
                          score: Callable[[Plan], TimingReport] | None = None,
                          floorplan_cache: FloorplanCache | None = None,
                          base_sim: SimResult | None = None,
                          jobs: int = 1,
+                         static_check: bool = True,
                          **ab_kwargs) -> DeferredSearch:
     """Enumerate and physically score every search point, deferring the
     batched throughput simulation to the caller (see ``DeferredSearch``).
@@ -357,8 +409,19 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
               replay in-process against the merged cache; ``jobs=1`` is
               the exact sequential path (results are bit-identical either
               way, the pool only moves the ILP wall time)
+    static_check — pre-flight static verification (``repro.analysis``):
+              ``autobridge`` refuses structurally-broken graphs before the
+              ILP (verdict cached in the floorplan cache) and, once a
+              firing count is known, ``DeferredSearch.apply_static_gate``
+              skips the simulation of provably-deadlocked candidates.
+              The produced frontier is bit-identical to
+              ``static_check=False`` by the analyzer's soundness; only the
+              doomed work disappears (counted by ``analysis_counts()``).
     """
+    model = model or PhysicalModel()
     space = space or SearchSpace()
+    if static_check:
+        ab_kwargs = {**ab_kwargs, "check": True}
     if mode == "grid" and space.continuous and points is None:
         mode = "random"
     if points is not None:
@@ -452,7 +515,8 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
 
     return DeferredSearch(graph=graph, grid=grid, model=model,
                           candidates=cands, space_size=len(points),
-                          base_sim=base_sim, pool=pool_stats)
+                          base_sim=base_sim, pool=pool_stats,
+                          static_check=static_check)
 
 
 def _buffer_bits(plan: Plan, extra_capacity: dict[str, int]) -> dict[str, float]:
@@ -519,12 +583,13 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
                          n_samples: int = 64,
                          sample_seed: int = 0,
                          points: Sequence[SearchPoint] | None = None,
-                         model: PhysicalModel = PhysicalModel(),
+                         model: PhysicalModel | None = None,
                          score: Callable[[Plan], TimingReport] | None = None,
                          sim_firings: int | None = None,
                          fifo_sizing: bool = False,
                          fifo_firings: int | None = None,
                          jobs: int = 1,
+                         static_check: bool = True,
                          **ab_kwargs) -> SearchResult:
     """Joint batched design-space search (see module docstring).
 
@@ -542,6 +607,9 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
                    utilization (``sized_report`` vs ``uniform_report``)
     jobs         — worker processes for the cold floorplan solves
                    (``jobs=1`` = exact sequential path, same results)
+    static_check — pre-flight static verification gate (see
+                   ``prepare_design_space``); frontier unchanged by
+                   construction, doomed candidates never simulated
     ab_kwargs    — forwarded to ``autobridge`` (e.g. ``same_slot``)
 
     >>> from repro.core import (SearchSpace, SlotGrid, TaskGraphBuilder,
@@ -560,12 +628,15 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
     >>> res.best.throughput_preserved
     True
     """
+    model = model or PhysicalModel()
     prep = prepare_design_space(graph, grid, space=space, mode=mode,
                                 n_samples=n_samples, sample_seed=sample_seed,
                                 points=points, model=model, score=score,
-                                jobs=jobs, **ab_kwargs)
+                                jobs=jobs, static_check=static_check,
+                                **ab_kwargs)
     sim_calls = 0
     if sim_firings:
+        prep.apply_static_gate(sim_firings)
         jobs_list = prep.sim_jobs()
         if jobs_list:
             prep.attach_sim(simulate_batch(jobs_list, firings=sim_firings))
@@ -630,10 +701,11 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
                            sim_firings: int | None = 200,
                            sample_seed: int = 0,
                            initial_points: Sequence[SearchPoint] | None = None,
-                           model: PhysicalModel = PhysicalModel(),
+                           model: PhysicalModel | None = None,
                            cache: FloorplanCache | None = None,
                            jobs: int = 1,
                            proposer="uniform",
+                           static_check: bool = True,
                            **ab_kwargs) -> ConvergedSearch:
     """Converging design-space search: iterate refine -> search until the
     Pareto frontier's hypervolume stops improving.
@@ -683,6 +755,7 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
     >>> res.cache.hits > 0            # refine rounds reuse floorplans
     True
     """
+    model = model or PhysicalModel()
     space = space or SearchSpace()
     cur_space = space
     cache = cache or FloorplanCache()
@@ -713,11 +786,13 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
         prep = prepare_design_space(graph, grid, points=pts, model=model,
                                     floorplan_cache=cache,
                                     base_sim=base_sim, jobs=jobs,
+                                    static_check=static_check,
                                     **ab_kwargs)
         if total_pool is not None and prep.pool is not None:
             total_pool.absorb(prep.pool)
         round_calls = 0
         if sim_firings:
+            prep.apply_static_gate(sim_firings)
             jobs_list = prep.sim_jobs()
             if jobs_list:
                 prep.attach_sim(simulate_batch(jobs_list,
@@ -830,10 +905,11 @@ def sweep_backends(graph: TaskGraph,
                    mode: str = "grid",
                    n_samples: int = 64,
                    sample_seed: int = 0,
-                   model: PhysicalModel = PhysicalModel(),
+                   model: PhysicalModel | None = None,
                    sim_firings: int | None = 200,
                    cache: FloorplanCache | None = None,
                    jobs: int = 1,
+                   static_check: bool = True,
                    **ab_kwargs) -> BackendSweep:
     """One-call multi-device sweep: the same design searched across several
     device grids (U250/U280/TPU-pod shapes from ``repro.fpga.archs``), with
@@ -870,6 +946,7 @@ def sweep_backends(graph: TaskGraph,
     >>> champ.plan is not None
     True
     """
+    model = model or PhysicalModel()
     if isinstance(grids, Mapping):
         named = dict(grids)
     else:
@@ -889,12 +966,13 @@ def sweep_backends(graph: TaskGraph,
                                         n_samples=n_samples,
                                         sample_seed=sample_seed, model=model,
                                         floorplan_cache=cache, jobs=jobs,
+                                        static_check=static_check,
                                         **ab_kwargs)
              for name, g in named.items()}
     sim_calls = 0
-    if sim_firings:
-        if pool_simulations(list(preps.values()), firings=sim_firings):
-            sim_calls = 1
+    if sim_firings and pool_simulations(list(preps.values()),
+                                       firings=sim_firings):
+        sim_calls = 1
     return BackendSweep(
         results={name: prep.finish(sim_calls=sim_calls)
                  for name, prep in preps.items()},
@@ -908,7 +986,7 @@ def sweep_backends(graph: TaskGraph,
 def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
                        utils: tuple[float, ...] = DEFAULT_UTILS,
                        seed: int = 0,
-                       model: PhysicalModel = PhysicalModel(),
+                       model: PhysicalModel | None = None,
                        score: Callable[[Plan], TimingReport] | None = None,
                        sim_firings: int | None = None,
                        **ab_kwargs) -> list[Candidate]:
@@ -916,6 +994,7 @@ def explore_floorplans(graph: TaskGraph, grid: SlotGrid, *,
     order, infeasible points kept as failed candidates (paper Table 10).
     Thin wrapper over ``explore_design_space`` with every other axis pinned
     to its default."""
+    model = model or PhysicalModel()
     space = SearchSpace(seeds=(seed,), utils=tuple(utils))
     res = explore_design_space(graph, grid, space=space, model=model,
                                score=score, sim_firings=sim_firings,

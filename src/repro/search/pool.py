@@ -44,7 +44,7 @@ from .space import SearchPoint
 # benchmarks record these in the BENCH JSON ``sim.pool`` block and the CI
 # gate checks a parallel run really dispatched and merged worker results.
 _POOL_COUNTS = {"dispatched": 0, "merged": 0, "worker_solves": 0,
-                "worker_infeasible": 0}
+                "worker_infeasible": 0, "static_skipped": 0}
 
 
 def reset_pool_counts() -> None:
@@ -71,6 +71,9 @@ class PoolStats:
     worker_solves: int = 0
     #: worker runs that ended in a (cached) infeasibility verdict
     worker_infeasible: int = 0
+    #: points never dispatched because the parent's static structural
+    #: analysis (``autobridge(check=True)`` pre-flight) doomed the graph
+    static_skipped: int = 0
     #: cumulative wall time spent inside pool fan-outs
     wall_s: float = 0.0
 
@@ -84,6 +87,7 @@ class PoolStats:
         self.merged += other.merged
         self.worker_solves += other.worker_solves
         self.worker_infeasible += other.worker_infeasible
+        self.static_skipped += other.static_skipped
         self.wall_s += other.wall_s
 
 
@@ -152,6 +156,25 @@ def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
                                      **ab_kwargs) not in cache]
     if not todo:
         return stats
+    if ab_kwargs.get("check"):
+        # Parent-side pre-flight: structural errors are knob-invariant
+        # (``with_knobs`` never moves pins or changes the grid shape), so
+        # one analysis stands in for every worker's — when it fails, cache
+        # the identical verdict each worker would have produced and skip
+        # the dispatch entirely.  Lazy import (circularity, see autobridge).
+        from repro.analysis import analyze
+        from repro.analysis.report import _ANALYSIS_COUNTS
+        rep = analyze(graph, grid=grid, passes=("structure",))
+        if not rep.ok:
+            msg = f"static analysis: {rep.error_summary()}"
+            for pt in todo:
+                cache.record_infeasible(
+                    initial_floorplan_key(graph, grid, **_point_kwargs(pt),
+                                          **ab_kwargs), msg)
+            _ANALYSIS_COUNTS["infeasible"] += len(todo)
+            stats.static_skipped = len(todo)
+            _POOL_COUNTS["static_skipped"] += len(todo)
+            return stats
     t0 = time.monotonic()
     with concurrent.futures.ProcessPoolExecutor(
             max_workers=min(jobs, len(todo)),

@@ -1,0 +1,479 @@
+"""Static dataflow verifier tests (``repro.analysis``).
+
+The load-bearing part is the soundness property: on randomized graphs
+(cycles, zero-capacity FIFOs, control closures, detached tasks) a graph
+``analyze()`` calls safe must never deadlock in the event engine at the
+same wave size — and, because the marked-graph analysis is exact, a graph
+it calls doomed must.  Around that: golden diagnostics for every lint
+code, the ``simulate(check=...)`` / ``autobridge(check=True)`` wiring, the
+search engine's static pre-flight gate (bit-identical frontier, doomed
+candidates never simulated), the worker pool's parent-side short-circuit,
+``add_stream`` construction-time validation, and the ``python -m
+repro.analysis`` CLI the ``lint-designs`` CI step runs.
+"""
+import json
+import random
+import warnings
+
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.analysis import (StaticAnalysisError, analysis_counts, analyze,
+                            min_cycles_bound, repetition_vector,
+                            reset_analysis_counts)
+from repro.analysis.__main__ import main as lint_main
+from repro.core import (InfeasibleError, TaskGraphBuilder, simulate,
+                        simulate_batch)
+from repro.core.autobridge import (FloorplanCache, autobridge,
+                                   initial_floorplan_key)
+from repro.core.graph import Stream, Task, TaskGraph
+from repro.fpga import benchmarks as B, grid_for
+from repro.search.engine import explore_design_space
+from repro.search.pool import warm_floorplan_cache
+from repro.search.space import SearchPoint, SearchSpace
+
+
+# ---------------------------------------------------------------------------
+# graph constructors
+# ---------------------------------------------------------------------------
+
+
+def _chain(depth=2, width=32):
+    # raw construction: ``depth=0`` deliberately bypasses the builder's
+    # add_stream validation (the escape hatch the broken-graph tests need)
+    g = TaskGraph("chain")
+    g.add_task(Task("P"))
+    g.add_task(Task("C"))
+    g.add_stream(Stream(name="s", src="P", dst="C", width=width,
+                        depth=depth), validate=False)
+    return g
+
+
+def _cycle(control_back=False):
+    b = TaskGraphBuilder("cyc")
+    b.stream("ab")
+    b.stream("ba", control=control_back)
+    b.invoke("A", ins=["ba"], outs=["ab"])
+    b.invoke("B", ins=["ab"], outs=["ba"])
+    return b.build()
+
+
+def _random_graph(rng: random.Random) -> TaskGraph:
+    """Layered graph with random fanin, zero-depth FIFOs, control streams,
+    detached sinks, skip edges, and an occasional feedback cycle — the
+    event-engine equivalence tests' generator, cycles always allowed."""
+    g = TaskGraph("rand")
+    layers = []
+    nid = 0
+    for li in range(rng.randint(2, 4)):
+        layer = []
+        for _ in range(rng.randint(1, 3)):
+            name = f"t{nid}"
+            nid += 1
+            g.add_task(Task(name=name,
+                            detached=(li > 0 and rng.random() < 0.1)))
+            layer.append(name)
+        layers.append(layer)
+    sid = 0
+    for li in range(1, len(layers)):
+        for dst in layers[li]:
+            for src in rng.sample(layers[li - 1],
+                                  rng.randint(1, len(layers[li - 1]))):
+                g.add_stream(Stream(name=f"e{sid}", src=src, dst=dst,
+                                    depth=rng.randint(0, 3),
+                                    control=(rng.random() < 0.1)),
+                             validate=False)       # depth may be 0
+                sid += 1
+    if len(layers) >= 3 and rng.random() < 0.7:   # reconvergent skip edge
+        g.add_stream(Stream(name=f"e{sid}", src=layers[0][0],
+                            dst=layers[-1][0], depth=rng.randint(0, 3)),
+                     validate=False)
+        sid += 1
+    if rng.random() < 0.5:                        # feedback edge
+        g.add_stream(Stream(name=f"e{sid}", src=layers[-1][0],
+                            dst=layers[0][0], depth=rng.randint(0, 2),
+                            control=(rng.random() < 0.2)),
+                     validate=False)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# soundness against the event engine (the tentpole property)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=220, deadline=None)
+@given(st.integers(0, 999_983))
+def test_deadlock_verdict_sound_and_exact(seed):
+    """>= 200 randomized graphs: ``analyze`` may never call a graph safe
+    that the event engine deadlocks on (soundness), and — the marked-graph
+    analysis being exact — every graph it dooms must really deadlock.  The
+    static cycles bound must hold whenever the run completes."""
+    rng = random.Random(seed)
+    g = _random_graph(rng)
+    lat = {s.name: rng.randint(0, 3) for s in g.streams}
+    extra = {s.name: rng.choice([0, 0, 1, 2]) for s in g.streams}
+    ii = {n: rng.randint(1, 3) for n in g.tasks}
+    firings = rng.randint(1, 25)
+    rep = analyze(g, latency=lat, extra_capacity=extra, ii=ii,
+                  firings=firings)
+    res = simulate(g, engine="event", firings=firings, latency=lat,
+                   extra_capacity=extra, ii=ii, max_cycles=500_000)
+    assert rep.deadlock == res.deadlocked, (
+        f"static verdict {rep.deadlock} vs engine {res.deadlocked} "
+        f"(seed {seed}): {[str(d) for d in rep.diagnostics]}")
+    if not res.deadlocked and rep.min_cycles is not None:
+        assert res.cycles >= rep.min_cycles
+    # the firing bounds are true upper bounds on what the engine achieved
+    for n, bound in rep.max_firings.items():
+        if bound is not None:
+            assert res.fired[n] <= bound
+
+
+def test_firing_bound_respects_extra_capacity():
+    """A zero-depth FIFO dooms the chain; pipeline headroom rescues it —
+    exactly the capacity model ``simulate`` uses."""
+    g = _chain(depth=0)
+    assert analyze(g).deadlock is False            # no verdict w/o firings
+    doomed = analyze(g, firings=5)
+    assert doomed.max_firings == {"P": 0, "C": 0}
+    assert doomed.deadlock and doomed.doomed(5) and not doomed.ok
+    rescued = analyze(g, firings=5, extra_capacity={"s": 2})
+    assert rescued.max_firings == {"P": None, "C": None}
+    assert not rescued.deadlock
+    sim = simulate(g, firings=5, extra_capacity={"s": 2})
+    assert not sim.deadlocked
+
+
+def test_min_cycles_bound_exact_on_chain():
+    g = _chain()
+    assert min_cycles_bound(g, firings=10) == 11
+    assert simulate(g, firings=10).cycles == 11
+    assert min_cycles_bound(_cycle(), firings=10) is None
+
+
+# ---------------------------------------------------------------------------
+# golden diagnostics, one per lint code
+# ---------------------------------------------------------------------------
+
+
+def _codes(g, **kw):
+    return analyze(g, **kw).codes()
+
+
+def test_a001_dangling_stream():
+    g = _chain()
+    del g.tasks["C"]
+    rep = analyze(g)
+    assert "A001-dangling-stream" in rep.codes() and not rep.ok
+
+
+def test_a002_self_loop():
+    g = TaskGraph("sl")
+    g.add_task(Task("A"))
+    g.add_stream(Stream(name="aa", src="A", dst="A"), validate=False)
+    assert "A002-self-loop-stream" in _codes(g)
+
+
+def test_a003_a004_bad_width_depth():
+    g = TaskGraph("wd")
+    g.add_task(Task("P"))
+    g.add_task(Task("C"))
+    g.add_stream(Stream(name="s", src="P", dst="C", width=0, depth=-1),
+                 validate=False)
+    got = _codes(g)
+    assert {"A003-nonpositive-width", "A004-negative-depth"} <= got
+
+
+def test_a005_zero_capacity_and_headroom():
+    g = _chain(depth=0)
+    assert "A005-zero-capacity" in _codes(g)
+    assert "A005-zero-capacity" not in _codes(g, extra_capacity={"s": 2})
+    # control streams carry no tokens: depth 0 is legal there
+    c = TaskGraph("ctl")
+    c.add_task(Task("P"))
+    c.add_task(Task("C"))
+    c.add_stream(Stream(name="k", src="P", dst="C", depth=0, control=True),
+                 validate=False)
+    assert "A005-zero-capacity" not in _codes(c)
+
+
+def test_a006_width_change_is_info():
+    b = TaskGraphBuilder("wc")
+    b.stream("i", width=32)
+    b.stream("o", width=64)
+    b.invoke("Src", outs=["i"])
+    b.invoke("Widen", ins=["i"], outs=["o"])
+    b.invoke("Dst", ins=["o"])
+    rep = analyze(b.build())
+    assert "A006-width-change" in rep.codes() and rep.ok
+
+
+def test_a007_a008_cycle_reachability():
+    got = _codes(_cycle())
+    assert {"A007-unreachable-task", "A008-sinkless-task"} <= got
+    assert _codes(_cycle(control_back=True)) == set()
+
+
+def test_a009_a010_a011_pin_lints():
+    grid = grid_for("u250")
+    g = TaskGraph("pins")
+    g.add_task(Task("Out", pinned=(99, 99)))
+    g.add_task(Task("A", area={"LUT": 1.0}, pinned=(0, 0)))
+    g.add_task(Task("B", area={"LUT": 1e12}, pinned=(0, 0)))
+    got = _codes(g, grid=grid)
+    assert {"A009-pin-outside-grid", "A010-pin-shared-slot",
+            "A011-pin-overflow"} <= got
+    assert _codes(g) == set()          # pin lints need the grid
+
+
+def test_a012_stale_index():
+    g = _chain()
+    g.streams.append(Stream(name="rogue", src="P", dst="C"))  # not add_stream
+    assert "A012-stale-index" in _codes(g)
+
+
+def test_d001_d002_dead_cycle_starves_downstream():
+    g = _cycle()
+    g.add_task(Task("C"))
+    g.add_stream(Stream(name="bc", src="B", dst="C"))
+    rep = analyze(g, firings=10)
+    assert {"D001-dead-cycle", "D002-starved-task"} <= rep.codes()
+    assert rep.deadlock and rep.firing_bound("C") == 0
+    # without a wave size the starvation downgrades to a warning
+    warned = analyze(g)
+    d002 = [d for d in warned.diagnostics if d.code == "D002-starved-task"]
+    assert d002 and all(d.severity == "warn" for d in d002)
+
+
+def test_r001_r002_rate_lints():
+    b = TaskGraphBuilder("rates")
+    for s in ("ab", "ac", "cb"):
+        b.stream(s, width=32)
+    b.invoke("A", outs=["ab", "ac"])
+    b.invoke("Cc", ins=["ac"], outs=["cb"])
+    b.invoke("Bb", ins=["ab", "cb"])
+    g = b.build()
+    assert repetition_vector(g) == {"A": 1, "Cc": 1, "Bb": 1}
+    next(s for s in g.streams if s.name == "ab").meta["rate_src"] = 64.0
+    rep = analyze(g)
+    assert "R001-rate-inconsistent" in rep.codes()
+    assert rep.repetition is None and rep.ok  # rate findings only warn
+    next(s for s in g.streams if s.name == "ab").meta["rate_src"] = 0.0
+    assert "R002-nonpositive-rate" in analyze(g).codes()
+
+
+def test_unknown_pass_rejected():
+    with pytest.raises(ValueError, match="unknown analysis pass"):
+        analyze(_chain(), passes=("structure", "wat"))
+
+
+# ---------------------------------------------------------------------------
+# add_stream construction-time validation (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_add_stream_validation():
+    g = TaskGraph("v")
+    g.add_task(Task("A"))
+    g.add_task(Task("B"))
+    with pytest.raises(ValueError, match="self-loop"):
+        g.add_stream(Stream(name="aa", src="A", dst="A"))
+    with pytest.raises(ValueError, match="non-positive width"):
+        g.add_stream(Stream(name="w", src="A", dst="B", width=0))
+    with pytest.raises(ValueError, match="non-positive depth"):
+        g.add_stream(Stream(name="d", src="A", dst="B", depth=0))
+    # unknown endpoints are rejected even with the escape hatch
+    with pytest.raises(ValueError, match="unknown task"):
+        g.add_stream(Stream(name="x", src="A", dst="Z"), validate=False)
+    g.add_stream(Stream(name="ok0", src="A", dst="B", depth=0),
+                 validate=False)                   # escape hatch for tests
+    g.add_stream(Stream(name="ok", src="A", dst="B"))
+    assert g.num_streams == 2
+
+
+# ---------------------------------------------------------------------------
+# simulate(check=...) pre-flight (tentpole wiring)
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_check_raise_and_warn():
+    g = _chain(depth=0)                            # statically doomed
+    with pytest.raises(StaticAnalysisError) as ei:
+        simulate(g, firings=5, check="raise")
+    assert "A005-zero-capacity" in str(ei.value)
+    assert not ei.value.report.ok and ei.value.report.deadlock
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res = simulate(g, firings=5, check="warn")
+    assert res.deadlocked
+    assert any("static analysis" in str(w.message) for w in rec)
+    with pytest.raises(ValueError, match="check must be"):
+        simulate(g, firings=5, check="yes")
+
+
+def test_simulate_check_clean_graph_unchanged():
+    g = _chain()
+    plain = simulate(g, firings=10)
+    checked = simulate(g, firings=10, check="raise")
+    assert (plain.cycles, plain.fired) == (checked.cycles, checked.fired)
+
+
+def test_simulate_batch_check():
+    with pytest.raises(StaticAnalysisError):
+        simulate_batch([_chain(), _chain(depth=0)], firings=5, check="raise")
+    ok = simulate_batch([_chain(), _chain()], firings=5, check="raise")
+    assert len(ok) == 2 and not any(r.deadlocked for r in ok)
+
+
+# ---------------------------------------------------------------------------
+# autobridge(check=True): static-infeasibility verdicts in the cache
+# ---------------------------------------------------------------------------
+
+
+def _broken_for_floorplan():
+    g = _chain()
+    for t in g.tasks.values():
+        t.area = {"LUT": 100.0}
+    del g.tasks["C"]                               # dangling stream
+    return g
+
+
+def test_autobridge_check_raises_and_caches():
+    g = _broken_for_floorplan()
+    grid = grid_for("u250")
+    cache = FloorplanCache()
+    reset_analysis_counts()
+    with pytest.raises(InfeasibleError, match="static analysis: A001"):
+        autobridge(g, grid, check=True, cache=cache)
+    after_first = analysis_counts()
+    assert after_first["infeasible"] == 1
+    # the verdict is cached: the second call replays it without re-analyzing
+    with pytest.raises(InfeasibleError, match="static analysis: A001"):
+        autobridge(g, grid, check=True, cache=cache)
+    assert analysis_counts()["analyzed"] == after_first["analyzed"]
+    key = initial_floorplan_key(g, grid)
+    assert cache.cached_error(key).startswith("static analysis")
+    # check=False (the default) keeps the legacy behavior: no pre-flight —
+    # the dangling stream surfaces as a raw KeyError deep in the ILP build,
+    # exactly the crash that check=True upgrades to a diagnostic
+    reset_analysis_counts()
+    with pytest.raises(KeyError):
+        autobridge(g, grid)
+    assert analysis_counts()["analyzed"] == 0
+
+
+def test_floorplan_cache_record_infeasible_first_writer_wins():
+    cache = FloorplanCache()
+    cache.record_infeasible(("k",), "first")
+    cache.record_infeasible(("k",), "second")
+    assert cache.cached_error(("k",)) == "first"
+    assert cache.cached_error(("other",)) is None
+
+
+def test_pool_parent_side_static_short_circuit():
+    """A doomed graph never reaches the worker pool: the parent analyzes
+    once, caches the per-point verdicts, and the replay raises the exact
+    message a sequential ``autobridge(check=True)`` produces."""
+    g = _broken_for_floorplan()
+    grid = grid_for("u250")
+    cache = FloorplanCache()
+    pts = [SearchPoint(seed=0, max_util=u) for u in (0.7, 0.8)]
+    reset_analysis_counts()
+    stats = warm_floorplan_cache(g, grid, pts, cache=cache, jobs=2,
+                                 ab_kwargs={"check": True})
+    assert stats.static_skipped == 2 and stats.dispatched == 0
+    assert analysis_counts()["infeasible"] == 2
+    for pt in pts:
+        with pytest.raises(InfeasibleError, match="static analysis: A001"):
+            autobridge(g, grid, check=True, cache=cache,
+                       max_util=pt.max_util, seed=pt.seed)
+    # without check the pool behaves as before (nothing short-circuits)
+    stats2 = warm_floorplan_cache(_chain(), grid, pts,
+                                  cache=FloorplanCache(), jobs=1,
+                                  ab_kwargs={"check": True})
+    assert stats2.static_skipped == 0
+
+
+# ---------------------------------------------------------------------------
+# the search engine's static pre-flight gate (frontier bit-identity)
+# ---------------------------------------------------------------------------
+
+
+def _doomed_design():
+    g = TaskGraph("doomed")
+    for n in ("A", "Bb", "Cc"):
+        g.add_task(Task(n, area={"LUT": 100.0}))
+    g.add_stream(Stream(name="ab", src="A", dst="Bb"))
+    g.add_stream(Stream(name="bc", src="Bb", dst="Cc"))
+    g.add_stream(Stream(name="ca", src="Cc", dst="A"))
+    return g
+
+
+def _frontier_key(res):
+    return sorted((c.point.max_util, c.point.seed,
+                   round(c.report.fmax_mhz, 6),
+                   None if c.sim is None else c.sim.cycles)
+                  for c in res.frontier)
+
+
+def test_gate_skips_doomed_candidates_without_moving_frontier():
+    grid = grid_for("u250")
+    space = SearchSpace(utils=(0.7, 0.8), seeds=(0,))
+    reset_analysis_counts()
+    gated = explore_design_space(_doomed_design(), grid, space=space,
+                                 sim_firings=30)
+    counts = analysis_counts()
+    assert counts["skipped"] == 2 and counts["doomed"] >= 2
+    ungated = explore_design_space(_doomed_design(), grid, space=space,
+                                   sim_firings=30, static_check=False)
+    assert _frontier_key(gated) == _frontier_key(ungated) == []
+    for c in gated.candidates:
+        assert c.sim.engine == "static" and c.sim.deadlocked
+        assert c.sim.fired == {n: 0 for n in c.plan.graph.tasks}
+        assert c.error.startswith("static deadlock:")
+    for c in ungated.candidates:
+        assert c.sim.engine != "static" and c.sim.deadlocked
+
+
+def test_gate_noop_on_live_design():
+    """On a healthy design the gate skips nothing and the frontier is
+    bit-identical to the ungated run."""
+    _, board, graph = next(e for e in B.autobridge_suite()
+                           if e[0] == "stencil_x2")
+    grid = grid_for(board)
+    space = SearchSpace(utils=(0.7, 0.8), seeds=(0,))
+    reset_analysis_counts()
+    gated = explore_design_space(graph, grid, space=space, sim_firings=30)
+    assert analysis_counts()["skipped"] == 0
+    assert gated.frontier
+    ungated = explore_design_space(graph, grid, space=space, sim_firings=30,
+                                   static_check=False)
+    assert _frontier_key(gated) == _frontier_key(ungated)
+
+
+# ---------------------------------------------------------------------------
+# benchmark designs are lint-clean; the CLI gates on that
+# ---------------------------------------------------------------------------
+
+
+def test_all_benchmark_designs_are_error_free():
+    for name, board, graph in B.autobridge_suite() + B.hbm_suite():
+        rep = analyze(graph, grid=grid_for(board), firings=50)
+        assert rep.ok, f"{name}@{board}: {[str(d) for d in rep.errors]}"
+        assert not rep.deadlock
+
+
+def test_cli_lints_designs(capsys):
+    # a bare name resolves to every board it appears on (stencil_x2 is on
+    # both u250 and u280), a qualified one to exactly that entry
+    assert lint_main(["stencil_x2", "page_rank@u280"]) == 0
+    out = capsys.readouterr().out
+    assert "3 design(s) linted, 0 with errors" in out
+    assert lint_main(["--json", "bucket_sort"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc[0]["ok"] is True and doc[0]["design"].startswith("bucket_sort")
+    assert lint_main(["--list"]) == 0
+    assert "stencil_x2@u250" in capsys.readouterr().out
+    with pytest.raises(SystemExit):
+        lint_main(["no_such_design"])

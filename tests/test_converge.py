@@ -364,6 +364,8 @@ def _converged_doc(opt_avg, *, hits, solved, points):
             "floorplan": {"solved": solved, "cache_hits": hits,
                           "ilp_bipartitions": 3 * solved},
             "points_evaluated": points,
+            "analysis": {"analyzed": points, "doomed": 0, "skipped": 0,
+                         "infeasible": 0},
         },
     }
 

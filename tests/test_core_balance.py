@@ -40,7 +40,7 @@ def test_paper_fig9_example():
     assert res.balance["e14"] == 0
     assert res.balance["e47"] == 2
     # every reconvergent v1->v7 path must now carry equal latency
-    for via, e_in, e_out in [("v2", "e12", "e27"), ("v3", "e13", "e37"),
+    for _via, e_in, e_out in [("v2", "e12", "e27"), ("v3", "e13", "e37"),
                              ("v4", "e14", "e47"), ("v5", "e15", "e57"),
                              ("v6", "e16", "e67")]:
         lat = dict((n, el) for n, _, _, el, _ in edges)
@@ -124,7 +124,7 @@ def test_property_matches_brute_force(n, m, seed):
         return
     res = balance_latencies(edges)
     # feasibility + non-negativity
-    for name, s, d, lat, w in edges:
+    for name, s, d, lat, _w in edges:
         assert res.potentials[s] - res.potentials[d] >= lat
         assert res.balance[name] >= 0
     # optimality vs exhaustive search over small potential range

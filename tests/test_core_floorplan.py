@@ -39,7 +39,7 @@ def test_capacity_respected():
                     max_util=1.0)
     fp = floorplan(g, grid)
     loads = {}
-    for name, slot in fp.placement.items():
+    for slot in fp.placement.values():
         loads[slot] = loads.get(slot, 0) + 100
     assert all(v <= 250 for v in loads.values())
 
@@ -172,10 +172,10 @@ def test_property_balanced_plans_preserve_throughput(seed):
     b.invoke("src", area={})
     nid = 0
     edges = []
-    for li in range(1, int(rng.integers(2, 5))):
+    for _li in range(1, int(rng.integers(2, 5))):
         width = int(rng.integers(1, 4))
         layer = []
-        for j in range(width):
+        for _j in range(width):
             name = f"t{nid}"
             nid += 1
             srcs = rng.choice(layers[-1],

@@ -18,7 +18,8 @@ import pytest
 # backcompat alias of ``repro.search.engine``; listing both proves the alias
 # resolves to a module whose examples still run.
 MODULES = ("repro.search.engine", "repro.search.space", "repro.search.pareto",
-           "repro.core.explorer", "repro.core.simulate", "repro.fpga.archs")
+           "repro.core.explorer", "repro.core.simulate", "repro.fpga.archs",
+           "repro.analysis")
 
 
 @pytest.mark.parametrize("name", MODULES)

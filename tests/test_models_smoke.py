@@ -56,7 +56,7 @@ def test_prefill_then_decode(name):
     assert logits.shape == (B, cfg.vocab)
     assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
     # two decode steps
-    for i in range(2):
+    for _ in range(2):
         nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         logits, cache = jax.jit(lambda p, c, t: lm.step(p, cfg, c, t))(
             params, cache, nxt)

@@ -11,6 +11,7 @@ interleaved single-process solves), the surrogate proposer's
 equal-or-better convergence regression, and the uniform fallback's
 bit-identity when the fit is underdetermined.
 """
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -218,16 +219,16 @@ def test_merge_floorplan_counts_aggregates():
 
 def test_pool_stats_absorb():
     a = PoolStats(jobs=2, dispatched=3, merged=3, worker_solves=5,
-                  worker_infeasible=1, wall_s=0.5)
+                  worker_infeasible=1, wall_s=0.5, static_skipped=1)
     b = PoolStats(jobs=4, dispatched=2, merged=2, worker_solves=2,
-                  wall_s=0.25)
+                  wall_s=0.25, static_skipped=2)
     a.absorb(b)
     assert (a.jobs, a.dispatched, a.merged, a.worker_solves,
-            a.worker_infeasible) == (4, 5, 5, 7, 1)
+            a.worker_infeasible, a.static_skipped) == (4, 5, 5, 7, 1, 3)
     assert a.wall_s == pytest.approx(0.75)
     assert set(a.as_dict()) == {"jobs", "dispatched", "merged",
                                 "worker_solves", "worker_infeasible",
-                                "wall_s"}
+                                "wall_s", "static_skipped"}
 
 
 # ---------------------------------------------------------------------------
@@ -286,11 +287,9 @@ class CacheMergeMachine(RuleBasedStateMachine):
         # replaying every recorded configuration on the merged parent never
         # solves again: pure hits (misses stay 0)
         for n, seed, util in self.configs:
-            try:
+            with contextlib.suppress(InfeasibleError):
                 autobridge(_chain_graph(n=n), self.GRID, seed=seed,
                            max_util=util, cache=parent)
-            except InfeasibleError:
-                pass
         assert parent.misses == 0
         assert parent.hits >= len(self.configs)
 

@@ -235,7 +235,9 @@ def test_check_regression_flags_event_fallback(tmp_path):
                 "throughput_violations": 0,
             },
             "sim": {"counts": counts,
-                    "invocations": sum(counts.values())},
+                    "invocations": sum(counts.values()),
+                    "analysis": {"analyzed": 7, "doomed": 0,
+                                 "skipped": 0, "infeasible": 0}},
         }
 
     def write(name, d):
@@ -262,7 +264,9 @@ def test_check_regression_flags_event_fallback(tmp_path):
             "suite": "throughput",
             "rows": [{"name": "d", "cycles_tapa": 100}],
             "sim": {"counts": counts,
-                    "invocations": sum(counts.values())},
+                    "invocations": sum(counts.values()),
+                    "analysis": {"analyzed": 5, "doomed": 0,
+                                 "skipped": 0, "infeasible": 0}},
         }
 
     tbase = write("tbase.json", tdoc({"event": 0, "cycle": 0, "numpy": 1}))
