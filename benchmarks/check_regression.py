@@ -26,6 +26,14 @@ regress beyond tolerance:
   points evaluated — no tolerance), and the ``sim.pool`` block must record
   the worker/merge counters (jobs >= 2, merged == dispatched) proving the
   solves really ran in subprocesses and were merged back.
+* fmax suite, jax-backend runs (``fmax_suite.py --backend jax``, JSON
+  carries ``"backend": "jax"`` and CI passes the fresh ``--backend
+  numpy`` JSON as *baseline*): the jitted sweep's contract is bit-exact
+  identity with the NumPy oracle, so every shared row field must match
+  EXACTLY (no tolerance), the ``jax`` engine counter must show the sweep
+  actually ran, every row's ``backend_used`` must be ``jax-padded``, and
+  any ``numpy``/``event``/``cycle`` invocation or ``fallback`` tick —
+  a silent degrade out of the jitted path — fails.
 * throughput suite: per-design TAPA cycle counts must not grow more than
   ``--tol`` relative to baseline; every baseline design must still be
   present; the vectorization gate always applies (the throughput suite is
@@ -72,14 +80,27 @@ def check_sim(cur: dict, *, label: str) -> list[str]:
                 f"{label} fell back to per-job {eng} simulation "
                 f"({runs} {eng}-engine run(s); expected 0)"
             )
-    numpy_runs = counts.get("numpy", 0)
-    if numpy_runs != 1:
+    if counts.get("fallback", 0):
+        errors.append(
+            f"{label} recorded {counts['fallback']} silent backend "
+            f"fallback(s) (expected 0)"
+        )
+    array_runs = counts.get("numpy", 0) + counts.get("jax", 0)
+    if array_runs != 1:
         # 0 means the simulation phase silently never ran; >1 means the
         # suite degraded into several array-sweeps
         errors.append(
-            f"{label} ran {numpy_runs} array-sweeps (expected exactly one "
+            f"{label} ran {array_runs} array-sweeps (expected exactly one "
             f"per suite)"
         )
+    declared = cur.get("backend") or sim.get("backend")
+    if declared in ("numpy", "jax"):
+        other = "jax" if declared == "numpy" else "numpy"
+        if counts.get(other, 0):
+            errors.append(
+                f"{label} declared backend={declared} but ran "
+                f"{counts[other]} {other} sweep(s)"
+            )
     return errors
 
 
@@ -104,10 +125,15 @@ def check_converged_sim(cur: dict, *, label: str) -> list[str]:
             f"{label} fell back to per-job cycle simulation "
             f"({counts['cycle']} run(s); expected 0)"
         )
-    if not counts.get("numpy", 0):
+    if counts.get("fallback", 0):
         errors.append(
-            f"{label} never reached the padded array backend "
-            f"(0 numpy array-sweeps; per-round batches degraded to "
+            f"{label} recorded {counts['fallback']} silent backend "
+            f"fallback(s) (expected 0)"
+        )
+    if not (counts.get("numpy", 0) + counts.get("jax", 0)):
+        errors.append(
+            f"{label} never reached a padded array backend "
+            f"(0 numpy/jax array-sweeps; per-round batches degraded to "
             f"per-job event simulation)"
         )
     fp = sim.get("floorplan", {})
@@ -229,6 +255,81 @@ def check_parallel_frontier(cur: dict, base: dict) -> list[str]:
     return errors
 
 
+#: row fields the jax-backend run must reproduce bit-exactly vs the fresh
+#: NumPy-backend run (everything except wall time and the engine label)
+JAX_IDENTITY_FIELDS = (
+    "tasks",
+    "streams",
+    "base_mhz",
+    "base_fail",
+    "opt_mhz",
+    "opt_fail",
+    "util",
+    "buffer_overhead_bits",
+    "frontier",
+    "cycles_base",
+    "cycles_opt",
+    "cycles_delta",
+    "sim_deadlock",
+    "throughput_preserved",
+)
+
+
+def check_jax_backend(cur: dict, base: dict) -> list[str]:
+    """The ``--backend jax`` gate: a jitted-sweep run vs the fresh NumPy
+    run it must reproduce.
+
+    The jax backend's contract is bit-exact identity with the NumPy
+    oracle (same padded layout, same firing rule, same deadlock
+    semantics), so any row difference — however small — breaks the
+    contract; no tolerance applies.  The engine counters must prove the
+    jitted sweep actually ran AND that nothing silently degraded out of
+    it: one ``numpy``/``event``/``cycle`` invocation or ``fallback``
+    tick means the speedup being benchmarked quietly never happened."""
+    errors = []
+    sim = cur.get("sim") or {}
+    counts = sim.get("counts", {})
+    if not counts.get("jax", 0):
+        errors.append("jax run recorded no jitted array-sweep (sim.counts.jax == 0)")
+    for eng in ("numpy", "event", "cycle"):
+        runs = counts.get(eng, 0)
+        if runs:
+            errors.append(
+                f"jax run silently degraded to the {eng} engine "
+                f"({runs} run(s); expected 0)"
+            )
+    if counts.get("fallback", 0):
+        errors.append(
+            f"jax run recorded {counts['fallback']} silent backend "
+            f"fallback(s) (expected 0)"
+        )
+    if counts.get("jax", 0) and not sim.get("jit_cache"):
+        errors.append("jax run's sim block records no jit_cache compile/hit counters")
+    cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
+    for r in cur["rows"]:
+        if "backend_used" in r and r["backend_used"] != "jax-padded":
+            errors.append(
+                f"design {(r['name'], r['board'])} scored on engine "
+                f"{r['backend_used']!r} (expected 'jax-padded')"
+            )
+    for r in base["rows"]:
+        key = (r["name"], r["board"])
+        got = cur_rows.get(key)
+        if got is None:
+            errors.append(f"design {key} missing from jax run")
+            continue
+        for field in JAX_IDENTITY_FIELDS:
+            if field not in r and field not in got:
+                continue
+            if got.get(field) != r.get(field):
+                errors.append(
+                    f"{key} {field} diverged under --backend jax: numpy "
+                    f"{r.get(field)!r} vs jax {got.get(field)!r} "
+                    f"(bit-exact contract broken)"
+                )
+    return errors
+
+
 def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
     errors = []
     cs, bs = cur["summary"], base["summary"]
@@ -250,6 +351,10 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
         errors += check_parallel_frontier(cur, base)
     elif cur.get("converge"):
         errors += check_converged_sim(cur, label="converged run")
+    elif cur.get("backend") == "jax" and base.get("backend") != "jax":
+        # jax-vs-numpy backend comparison: exact identity
+        errors += check_sim(cur, label="jax backend run")
+        errors += check_jax_backend(cur, base)
     elif cur.get("subset"):
         errors += check_sim(cur, label="fast subset")
     errors += check_analysis(cur, base, label="fmax suite")

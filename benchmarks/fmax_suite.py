@@ -38,10 +38,18 @@ worker dispatch/merge counters plus the parent-side merged floorplan
 counts.  ``--proposer surrogate`` switches the round proposals to the
 response-surface model (``repro.search.surrogate``).
 
+``--backend`` pins the ``simulate_batch`` backend for the suite's
+simulation phase (default ``auto``: the jax-jitted sweep when jax is
+importable, the NumPy sweep otherwise).  A ``--backend jax`` run records
+the jitted sweep's compile-cache counters (``sim.jit_cache``) and a
+*measured* NumPy-vs-jax ``sim.speedup`` block — the CI jax leg gates that
+run row-exact against a fresh NumPy JSON (``check_jax_backend``).
+
 CLI:
     python benchmarks/fmax_suite.py [--subset fast|full] [--json PATH]
                                     [--firings N] [--no-sim] [--converge]
                                     [--jobs N] [--proposer uniform|surrogate]
+                                    [--backend auto|numpy|jax|event]
 """
 from __future__ import annotations
 
@@ -92,15 +100,19 @@ def prepare(name: str, board: str, graph) -> dict:
             "base_pl": base_pl, "base": base, "prep": prep, "wall_s": wall}
 
 
-def score_all(entries: list[dict], sim_firings: int | None) -> dict | None:
+def score_all(entries: list[dict], sim_firings: int | None,
+              backend: str = "auto") -> dict | None:
     """The suite's entire simulation phase: one ``simulate_batch`` call
     over every design's baseline + feasible candidates (mixed topologies
     vectorize through the padded backend).  Returns the recorded metadata
-    (engine counters, backends, wall time) or None when sim is disabled."""
+    (engine counters, backends, wall time; plus the jit compile-cache and
+    the measured NumPy-vs-jax speedup for ``backend="jax"`` runs) or None
+    when sim is disabled."""
     if not sim_firings:
         return None
     _, meta = timed_pool_simulations([e["prep"] for e in entries],
-                                     firings=sim_firings)
+                                     firings=sim_firings, backend=backend,
+                                     measure_speedup=(backend == "jax"))
     return meta
 
 
@@ -156,7 +168,8 @@ def finish(entry: dict, sim_firings: int | None) -> dict:
 
 def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
                   cache: FloorplanCache, jobs: int = 1,
-                  proposer: str = "uniform") -> dict:
+                  proposer: str = "uniform",
+                  backend: str = "auto") -> dict:
     """One design through ``search_until_converged``: continuous util range
     anchored on the discrete UTIL_SWEEP grid, shared floorplan cache.
     ``jobs`` fans the cold ILP solves over the worker pool (bit-identical
@@ -171,7 +184,7 @@ def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
         space=SearchSpace(utils=Interval(UTIL_SWEEP[0], UTIL_SWEEP[-1])),
         rounds=CONVERGE_ROUNDS, points_per_round=CONVERGE_POINTS,
         sim_firings=sim_firings, initial_points=anchors, cache=cache,
-        jobs=jobs, proposer=proposer)
+        jobs=jobs, proposer=proposer, sim_backend=backend)
     row = assemble_row(name, board, graph, grid, base_pl, base, res,
                        wall=time.monotonic() - t0, sim_firings=sim_firings)
     row.update({
@@ -208,12 +221,13 @@ def summarize(rows: list[dict]) -> dict:
 
 def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
          subset: tuple[str, ...] | None = None,
-         json_path: str | None = None) -> list[dict]:
+         json_path: str | None = None,
+         backend: str = "auto") -> list[dict]:
     reset_analysis_counts()
     entries = [prepare(name, board, graph)
                for name, board, graph in B.autobridge_suite()
                if subset is None or name in subset]
-    sim_meta = score_all(entries, sim_firings)
+    sim_meta = score_all(entries, sim_firings, backend)
     rows = []
     for entry in entries:
         r = finish(entry, sim_firings)
@@ -239,10 +253,15 @@ def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
               f"invocations={sim_meta['invocations']} "
               f"backends={'+'.join(sim_meta['backends'])} "
               f"wall={sim_meta['wall_s']:.3f}s")
+        if sim_meta.get("speedup"):
+            sp = sim_meta["speedup"]
+            print(f"fmax_suite,SPEEDUP,0,numpy={sp['numpy_wall_s']:.3f}s "
+                  f"jax={sp['jax_wall_s']:.3f}s x{sp['speedup']:.1f}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "fmax_suite", "sim_firings": sim_firings,
                        "subset": sorted(subset) if subset else None,
+                       "backend": backend,
                        "rows": rows, "summary": s, "sim": sim_meta},
                       f, indent=2)
         print(f"fmax_suite,JSON,0,wrote {json_path}")
@@ -254,7 +273,8 @@ def main_converged(verbose: bool = True,
                    subset: tuple[str, ...] | None = None,
                    json_path: str | None = None,
                    jobs: int = 1,
-                   proposer: str = "uniform") -> list[dict]:
+                   proposer: str = "uniform",
+                   backend: str = "auto") -> list[dict]:
     """The ``--converge`` path: per-design ``search_until_converged`` with a
     suite-wide ``FloorplanCache``; the JSON ``sim`` block carries the
     floorplan solve/cache-hit counters the CI gate checks, plus the
@@ -272,7 +292,8 @@ def main_converged(verbose: bool = True,
         if subset is not None and name not in subset:
             continue
         r = run_converged(name, board, graph, sim_firings=sim_firings,
-                          cache=cache, jobs=jobs, proposer=proposer)
+                          cache=cache, jobs=jobs, proposer=proposer,
+                          backend=backend)
         rows.append(r)
         if verbose:
             base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
@@ -288,7 +309,7 @@ def main_converged(verbose: bool = True,
                 "counts": engine_counts(), "floorplan": fp,
                 "cache": cache.stats(), "pool": pool,
                 "analysis": ana,
-                "proposer": proposer,
+                "proposer": proposer, "backend": backend,
                 "points_evaluated": sum(r["points_evaluated"] for r in rows),
                 "wall_s": time.monotonic() - t0}
     s = summarize(rows)
@@ -311,6 +332,7 @@ def main_converged(verbose: bool = True,
             json.dump({"suite": "fmax_suite", "converge": True,
                        "sim_firings": sim_firings,
                        "subset": sorted(subset) if subset else None,
+                       "backend": backend,
                        "rows": rows, "summary": s, "sim": sim_meta},
                       f, indent=2)
         print(f"fmax_suite,JSON,0,wrote {json_path}")
@@ -338,12 +360,18 @@ if __name__ == "__main__":
     ap.add_argument("--proposer", choices=("uniform", "surrogate"),
                     default="uniform",
                     help="converged-search round-proposal strategy")
+    ap.add_argument("--backend", choices=("auto", "numpy", "jax", "event"),
+                    default="auto",
+                    help="simulate_batch backend for the simulation phase "
+                         "(jax additionally records sim.jit_cache and a "
+                         "measured sim.speedup block)")
     args = ap.parse_args()
     sim = None if args.no_sim else (args.firings or None)
     subset = FAST_SUBSET if args.subset == "fast" else None
     if args.converge:
         main_converged(sim_firings=sim, subset=subset,
                        json_path=args.json_path, jobs=args.jobs,
-                       proposer=args.proposer)
+                       proposer=args.proposer, backend=args.backend)
     else:
-        main(sim_firings=sim, subset=subset, json_path=args.json_path)
+        main(sim_firings=sim, subset=subset, json_path=args.json_path,
+             backend=args.backend)

@@ -10,6 +10,7 @@ design's best Pareto-frontier candidate.
 
 CLI:
     python benchmarks/throughput.py [--json PATH] [--firings N]
+                                    [--backend auto|numpy|jax|event]
 """
 from __future__ import annotations
 
@@ -24,7 +25,8 @@ from repro.fpga import benchmarks as B, u250_grid, u280_grid
 DEFAULT_FIRINGS = 300
 
 
-def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None):
+def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None,
+        backend: str = "auto"):
     reset_analysis_counts()
     designs = [
         ("cnn_13x4", B.cnn(4), u250_grid()),
@@ -39,7 +41,7 @@ def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None):
 
     # the suite's whole simulation phase: one padded cross-design batch
     _, sim_meta = timed_pool_simulations([prep for _, prep in preps],
-                                         firings=firings)
+                                         firings=firings, backend=backend)
 
     rows = []
     for name, prep in preps:
@@ -69,6 +71,7 @@ def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None):
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "throughput", "firings": firings,
+                       "backend": backend,
                        "rows": rows, "sim": sim_meta}, f, indent=2)
         print(f"throughput,JSON,0,wrote {json_path}")
     return rows
@@ -79,11 +82,15 @@ def main():
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write rows as JSON (BENCH_throughput.json)")
     ap.add_argument("--firings", type=int, default=DEFAULT_FIRINGS)
+    ap.add_argument("--backend", choices=("auto", "numpy", "jax", "event"),
+                    default="auto",
+                    help="simulate_batch backend for the batched scoring")
     args = ap.parse_args()
     if args.firings <= 0:
         ap.error("--firings must be positive (the cycle columns ARE the "
                  "benchmark; use fmax_suite.py --no-sim for a sim-free run)")
-    run(firings=args.firings, json_path=args.json_path)
+    run(firings=args.firings, json_path=args.json_path,
+        backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -28,9 +28,10 @@ _SEARCH_EXPORTS = (
     "BackendSweep", "Candidate", "ConvergedSearch", "DeferredSearch",
     "Interval", "SearchPoint", "SearchResult", "SearchSpace",
     "best_candidate", "explore_design_space", "explore_floorplans",
-    "hypervolume", "pareto_frontier", "pareto_indices", "pool_simulations",
-    "prepare_design_space", "search_until_converged", "sweep_backends",
-    "timed_pool_simulations",
+    "gather_sim_jobs", "hypervolume", "measure_backend_speedup",
+    "pareto_frontier", "pareto_indices", "pool_simulations",
+    "prepare_design_space", "scatter_sim_results", "search_until_converged",
+    "sweep_backends", "timed_pool_simulations",
 )
 
 __all__ = [

@@ -39,15 +39,19 @@ Engines
   randomized graphs in the test suite.
 * ``simulate_batch``: many (graph, latency, capacity, II) variants at once.
   Jobs are grouped by topology signature and *padded* to the largest
-  (task, stream) shape in the batch, so one (V, T*, S*) array-sweep covers
+  (task, stream) shape in the batch (the canonical layout lives in
+  ``repro.kernels.padded_batch``), so one (V, T*, S*) array-sweep covers
   heterogeneous graphs (cross-design benchmark tables, multi-device
-  sweeps) as well as the classic fixed-topology floorplan sweep.  The
+  sweeps) as well as the classic fixed-topology floorplan sweep.  Two
+  array backends share that layout: the NumPy sweep (the bit-exact
+  oracle) and a ``jax.jit``-compiled port (``repro.kernels.sim_sweep``)
+  that ``backend="auto"`` promotes to whenever jax is importable.  The
   event engine is only used when NumPy is missing or ``backend="event"``
   is forced.
 
 All engines implement the exact same synchronous-firing semantics: a task
 fires at cycle t iff its constraints hold on the state produced by cycles
-< t, so same-cycle firings are order-independent and the three engines
+< t, so same-cycle firings are order-independent and all four engines
 agree bit-for-bit on ``cycles``/``fired``/``deadlocked``.
 """
 from __future__ import annotations
@@ -112,10 +116,14 @@ class SimJob:
 
 
 # Python-level engine invocations since the last reset: one per event/cycle
-# engine run, one per vectorized array-sweep.  Benchmark drivers read these
-# to prove (and CI to enforce) that a suite's simulation phase stayed
-# batched instead of degrading to per-job Python loops.
-_ENGINE_INVOCATIONS = {"event": 0, "cycle": 0, "numpy": 0}
+# engine run, one per vectorized array-sweep (NumPy or jax-jitted).
+# Benchmark drivers read these to prove (and CI to enforce) that a suite's
+# simulation phase stayed batched instead of degrading to per-job Python
+# loops.  "fallback" ticks whenever ``backend="auto"`` silently degrades
+# below the backend it would normally pick (no NumPy, or knobs outside the
+# jax sweep's int32 range) — CI gates assert it stays zero.
+_ENGINE_INVOCATIONS = {"event": 0, "cycle": 0, "numpy": 0, "jax": 0,
+                       "fallback": 0}
 
 
 def reset_engine_counts() -> None:
@@ -127,6 +135,26 @@ def reset_engine_counts() -> None:
 def engine_counts() -> dict[str, int]:
     """Snapshot of engine invocations since the last reset."""
     return dict(_ENGINE_INVOCATIONS)
+
+
+_JAX_READY: bool | None = None
+
+
+def _jax_ready() -> bool:
+    """True when the jitted sweep backend is usable (jax importable and
+    NumPy present for the padded-layout builder).  Cached after the first
+    probe; importing jax is the expensive part and happens at most once."""
+    global _JAX_READY
+    if _JAX_READY is None:
+        if _np is None:
+            _JAX_READY = False
+        else:
+            try:
+                from repro.kernels.sim_sweep import HAVE_JAX
+                _JAX_READY = bool(HAVE_JAX)
+            except Exception:  # pragma: no cover - defensive
+                _JAX_READY = False
+    return _JAX_READY
 
 
 def _static_check(graph: TaskGraph, mode: str, *, firings: int,
@@ -500,10 +528,16 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
     termination/deadlock checks, so each job's results are exactly those of
     its own event simulation.
 
-    backend — "auto" (default): the padded NumPy engine whenever NumPy is
-              present and there is more than one job; a lone job runs the
-              event engine.
-              "numpy": force the array engine (works for any mix of
+    backend — "auto" (default): the jax-jitted padded engine whenever jax
+              is importable and every knob fits the sweep's int32 range;
+              otherwise the padded NumPy engine whenever NumPy is present
+              and there is more than one job; a lone job runs the event
+              engine.  Every degradation below the expected rung (no
+              NumPy at all, or int32-unsafe knobs with jax present) ticks
+              ``engine_counts()["fallback"]`` and emits a warning.
+              "jax": force the jitted sweep (``repro.kernels.sim_sweep``;
+              raises when jax is missing or the knobs overflow int32).
+              "numpy": force the NumPy array engine (works for any mix of
               topologies; raises only when NumPy itself is missing).
               "event": force per-job event simulation.
     max_bytes — byte budget for the padded array state (default 1 GiB,
@@ -511,8 +545,9 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
               would exceed it, the batch is split into successive
               contiguous array-sweeps ("chunks") that each fit; results
               are identical to the unchunked run, and each chunk counts
-              one ``numpy`` engine invocation in ``engine_counts()`` —
-              i.e. the counters report the chunk count.
+              one ``numpy``/``jax`` engine invocation in
+              ``engine_counts()`` — i.e. the counters report the chunk
+              count.
     check   — pre-flight static verification per job (``repro.analysis``),
               same semantics as ``simulate(check=...)``: ``"warn"`` or
               ``"raise"``; ``None`` (default) skips the analyzer.
@@ -549,56 +584,79 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
             _static_check(j.graph, check, firings=firings,
                           latency=j.latency, extra_capacity=j.extra_capacity,
                           ii=j.ii)
-    if backend not in ("auto", "event", "numpy"):
+    if backend not in ("auto", "event", "numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
     if backend == "numpy" and _np is None:
         raise ValueError("numpy backend requires NumPy")
-    use_numpy = (backend == "numpy"
-                 or (backend == "auto" and _np is not None and len(norm) > 1))
-    if not use_numpy:
+    if backend == "jax":
+        if not _jax_ready():
+            raise ValueError("jax backend requires jax (and NumPy)")
+        from repro.kernels.sim_sweep import fits_int32
+        if not fits_int32(norm, firings, max_cycles):
+            raise ValueError(
+                "jax backend is int32-only: firings, max_cycles and every "
+                "latency/capacity/II knob must stay below 2**30 "
+                "(use backend='numpy' for larger values)")
+    resolved = backend
+    if backend == "auto":
+        if _np is None:
+            _ENGINE_INVOCATIONS["fallback"] += 1
+            warnings.warn(
+                "simulate_batch(backend='auto'): NumPy unavailable, "
+                "degrading to per-job event simulation", stacklevel=2)
+            resolved = "event"
+        elif len(norm) <= 1:
+            resolved = "event"          # by design, not a degradation
+        elif _jax_ready():
+            from repro.kernels.sim_sweep import fits_int32
+            if fits_int32(norm, firings, max_cycles):
+                resolved = "jax"
+            else:
+                _ENGINE_INVOCATIONS["fallback"] += 1
+                warnings.warn(
+                    "simulate_batch(backend='auto'): knobs exceed the jax "
+                    "sweep's int32 range, degrading to the NumPy backend",
+                    stacklevel=2)
+                resolved = "numpy"
+        else:
+            resolved = "numpy"
+    if resolved == "event":
         return [simulate(j.graph, firings=firings, latency=j.latency,
                          extra_capacity=j.extra_capacity, ii=j.ii,
                          max_cycles=max_cycles, engine="event")
                 for j in norm]
+    sweep = (_simulate_batch_jax if resolved == "jax"
+             else _simulate_batch_numpy)
     chunk = len(norm)
     if max_bytes is not None:
         chunk = max(1, min(chunk, int(max_bytes // _job_bytes_estimate(norm))))
     if chunk >= len(norm):
-        return _simulate_batch_numpy(norm, firings=firings,
-                                     max_cycles=max_cycles)
+        return sweep(norm, firings=firings, max_cycles=max_cycles)
     out: list[SimResult] = []
     for i in range(0, len(norm), chunk):
-        out.extend(_simulate_batch_numpy(norm[i:i + chunk], firings=firings,
-                                         max_cycles=max_cycles))
+        out.extend(sweep(norm[i:i + chunk], firings=firings,
+                         max_cycles=max_cycles))
     return out
 
 
-class _Group:
-    """Index structures shared by one topology group, padded-row placement.
+def _simulate_batch_jax(jobs: list[SimJob], *, firings: int,
+                        max_cycles: int) -> list[SimResult]:
+    """Jitted padded ragged-batch engine (``repro.kernels.sim_sweep``).
 
-    Rows ``[r0, r1)`` of the batch state arrays belong to this group; the
-    group's real tasks/streams occupy the first ``T``/``S`` columns and the
-    remaining columns up to (T*, S*) are phantom padding."""
+    Same canonical padded layout as the NumPy engine — both consume
+    ``repro.kernels.padded_batch.build_padded_batch`` — driven through one
+    ``jax.jit``-compiled ``lax.while_loop`` sweep with donated state
+    buffers, compilation cached by the bucketed padded shape.  Results are
+    bit-identical to the NumPy oracle; the ``engine`` label is
+    ``"jax-padded"``."""
+    from repro.kernels.padded_batch import build_padded_batch
+    from repro.kernels.sim_sweep import simulate_padded_jax
 
-    def __init__(self, np, m0: _Model, r0: int, r1: int):
-        self.r0, self.r1 = r0, r1
-        self.names = m0.names
-        self.snames = [s.name for s in m0.data]
-        self.T, self.S = len(self.names), len(self.snames)
-        tidx = {n: i for i, n in enumerate(self.names)}
-        self.prod = np.array([tidx[m0.producer[s]] for s in self.snames],
-                             dtype=np.int64)
-        self.cons = np.array([tidx[m0.consumer[s]] for s in self.snames],
-                             dtype=np.int64)
-        # incidence matrices stream -> task (real streams only: phantom
-        # padding streams are attached to no task and can't gate anything)
-        self.a_in = np.zeros((self.S, self.T), dtype=np.int64)
-        self.a_out = np.zeros((self.S, self.T), dtype=np.int64)
-        for si in range(self.S):
-            self.a_in[si, self.cons[si]] = 1
-            self.a_out[si, self.prod[si]] = 1
-        self.indeg = self.a_in.sum(axis=0)
-        self.outdeg = self.a_out.sum(axis=0)
+    _ENGINE_INVOCATIONS["jax"] += 1
+    pb = build_padded_batch(jobs)
+    cycles, dead, fired, steps = simulate_padded_jax(
+        pb, firings=firings, max_cycles=max_cycles)
+    return pb.unpack(cycles, dead, fired, steps, "jax-padded")
 
 
 def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
@@ -606,58 +664,26 @@ def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
     """Padded ragged-batch synchronous engine.
 
     State is (V, T*)/(V, S*) integer arrays over *all* jobs, where T*/S*
-    are the maximum task/stream counts across topology groups; token
-    visibility uses a ring buffer of cumulative push counts (a token pushed
-    at cycle u is visible at u + 1 + lat, so the consumer-visible token
-    count at cycle t is the cumulative push count at cycle t - 1 - lat).
-    FIFO order plus constant per-stream latency make that view exact.
-    Per-group incidence matmuls run on contiguous row slices inside the one
-    shared cycle loop; everything else is a full-batch array op.
+    are the maximum task/stream counts across topology groups (the
+    canonical padded layout built by ``repro.kernels.padded_batch``);
+    token visibility uses a ring buffer of cumulative push counts (a token
+    pushed at cycle u is visible at u + 1 + lat, so the consumer-visible
+    token count at cycle t is the cumulative push count at cycle
+    t - 1 - lat).  FIFO order plus constant per-stream latency make that
+    view exact.  Per-group incidence matmuls run on contiguous row slices
+    inside the one shared cycle loop; everything else is a full-batch
+    array op.
     """
     np = _np
     _ENGINE_INVOCATIONS["numpy"] += 1
+    from repro.kernels.padded_batch import build_padded_batch
 
-    # ---- group jobs by topology; make groups row-contiguous --------------
-    sig_cache: dict[int, tuple] = {}
-    members: dict[tuple, list[int]] = {}
-    for v, j in enumerate(jobs):
-        sig = sig_cache.get(id(j.graph))
-        if sig is None:
-            sig = _topology_signature(j.graph)
-            sig_cache[id(j.graph)] = sig
-        members.setdefault(sig, []).append(v)
-    perm = [v for mem in members.values() for v in mem]
-    models = [_Model(jobs[v].graph, jobs[v].latency, jobs[v].extra_capacity,
-                     jobs[v].ii) for v in perm]
+    pb = build_padded_batch(jobs)
+    V, T, S, H = pb.V, pb.T, pb.S, pb.H
+    groups = pb.groups
+    lat, cap, ii = pb.lat, pb.cap, pb.ii
+    task_active, counted = pb.task_active, pb.counted
 
-    groups: list[_Group] = []
-    r0 = 0
-    for mem in members.values():
-        groups.append(_Group(np, models[r0], r0, r0 + len(mem)))
-        r0 += len(mem)
-
-    V = len(jobs)
-    T = max((g.T for g in groups), default=0)
-    S = max((g.S for g in groups), default=0)
-
-    # ---- padded per-job knob arrays and masks ----------------------------
-    lat = np.zeros((V, S), dtype=np.int64)
-    cap = np.zeros((V, S), dtype=np.int64)
-    ii = np.ones((V, T), dtype=np.int64)
-    task_active = np.zeros((V, T), dtype=bool)
-    counted = np.zeros((V, T), dtype=bool)      # active and non-detached
-    for g in groups:
-        for v in range(g.r0, g.r1):
-            m = models[v]
-            if g.S:
-                lat[v, :g.S] = [m.lat[s] for s in g.snames]
-                cap[v, :g.S] = [m.cap[s] for s in g.snames]
-            if g.T:
-                ii[v, :g.T] = [m.ii[n] for n in g.names]
-                counted[v, :g.T] = [not m.detached[n] for n in g.names]
-        task_active[g.r0:g.r1, :g.T] = True
-
-    H = int(lat.max(initial=0)) + 2
     hist = np.zeros((V, S, H), dtype=np.int64)     # cum pushes at cycle slot
     pops = np.zeros((V, S), dtype=np.int64)
     pushes = np.zeros((V, S), dtype=np.int64)
@@ -739,12 +765,4 @@ def _simulate_batch_numpy(jobs: list[SimJob], *, firings: int,
         out_dead[active] = ~all_done()[active]
 
     engine = "numpy-batch" if len(groups) == 1 else "numpy-padded"
-    out: list[SimResult] = [None] * V          # type: ignore[list-item]
-    for g in groups:
-        for v in range(g.r0, g.r1):
-            out[perm[v]] = SimResult(
-                cycles=int(out_cycles[v]),
-                fired={n: int(fired[v, i]) for i, n in enumerate(g.names)},
-                deadlocked=bool(out_dead[v]),
-                steps=steps, engine=engine)
-    return out
+    return pb.unpack(out_cycles, out_dead, fired, steps, engine)

@@ -19,9 +19,11 @@ compatibility; new code should import from ``repro.search``.
 from .engine import (BackendSweep, Candidate, ConvergedSearch,
                      DeferredSearch, SearchResult, best_candidate,
                      explore_design_space, explore_floorplans,
+                     gather_sim_jobs, measure_backend_speedup,
                      pareto_frontier, pool_simulations,
-                     prepare_design_space, search_until_converged,
-                     sweep_backends, timed_pool_simulations)
+                     prepare_design_space, scatter_sim_results,
+                     search_until_converged, sweep_backends,
+                     timed_pool_simulations)
 from .pareto import hypervolume, objective_vector, pareto_indices
 from .pool import (PoolStats, pool_counts, reset_pool_counts,
                    warm_floorplan_cache)
@@ -32,8 +34,9 @@ from .surrogate import (ResponseSurface, SurrogateProposer, UniformProposer,
 __all__ = [
     "BackendSweep", "Candidate", "ConvergedSearch", "DeferredSearch",
     "SearchResult", "best_candidate", "explore_design_space",
-    "explore_floorplans", "pareto_frontier", "pool_simulations",
-    "prepare_design_space", "search_until_converged", "sweep_backends",
+    "explore_floorplans", "gather_sim_jobs", "measure_backend_speedup",
+    "pareto_frontier", "pool_simulations", "prepare_design_space",
+    "scatter_sim_results", "search_until_converged", "sweep_backends",
     "timed_pool_simulations",
     "hypervolume", "objective_vector", "pareto_indices",
     "PoolStats", "pool_counts", "reset_pool_counts", "warm_floorplan_cache",

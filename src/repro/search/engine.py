@@ -249,6 +249,10 @@ class DeferredSearch:
     #: run the static pre-flight gate before simulating candidates
     #: (``prepare_design_space(static_check=...)``)
     static_check: bool = True
+    #: ``simulate_batch`` backend this search's jobs should be scored with
+    #: ("auto" / "jax" / "numpy" / "event"; honored by ``pool_simulations``
+    #: and the drivers that consume ``sim_jobs()``)
+    sim_backend: str = "auto"
 
     @property
     def feasible(self) -> list[Candidate]:
@@ -327,15 +331,15 @@ class DeferredSearch:
                             space_size=self.space_size)
 
 
-def pool_simulations(preps: Sequence[DeferredSearch], *,
-                     firings: int) -> list[SimResult]:
-    """Score many deferred searches' jobs in ONE ``simulate_batch`` call.
-
-    Concatenates every search's ``sim_jobs()``, runs the single batched
-    call (mixed topologies vectorize through the padded backend), and
-    distributes each search's slice back via ``attach_sim``.  Returns the
-    flat result list ([] when there was nothing to score) so callers can
-    record metadata such as the engines used."""
+def gather_sim_jobs(preps: Sequence[DeferredSearch], *,
+                    firings: int) -> tuple[list[SimJob],
+                                           list[tuple[int, int]]]:
+    """Apply the static pre-flight gate and collect every search's pending
+    simulation jobs into one flat list.  Returns ``(jobs, spans)`` where
+    ``spans[i]`` is search i's slice of ``jobs`` — feed the batched results
+    back with ``scatter_sim_results``.  Split out of ``pool_simulations``
+    so drivers can hold on to the job list (e.g. to re-time it under
+    another backend with ``measure_backend_speedup``)."""
     jobs: list[SimJob] = []
     spans: list[tuple[int, int]] = []
     for prep in preps:
@@ -344,37 +348,123 @@ def pool_simulations(preps: Sequence[DeferredSearch], *,
         pj = prep.sim_jobs()
         spans.append((len(jobs), len(jobs) + len(pj)))
         jobs.extend(pj)
-    if not jobs:
-        return []
-    results = simulate_batch(jobs, firings=firings)
+    return jobs, spans
+
+
+def scatter_sim_results(preps: Sequence[DeferredSearch],
+                        spans: Sequence[tuple[int, int]],
+                        results: Sequence[SimResult]) -> None:
+    """Distribute one batched call's results back onto the searches whose
+    jobs ``gather_sim_jobs`` collected (inverse of the concatenation)."""
     for prep, (lo, hi) in zip(preps, spans):
         prep.attach_sim(results[lo:hi])
+
+
+def _resolve_backend(preps: Sequence[DeferredSearch],
+                     backend: str | None) -> str:
+    """An explicit ``backend`` wins; otherwise the searches' unanimous
+    ``sim_backend``, or "auto" when they disagree."""
+    if backend is not None:
+        return backend
+    kinds = {p.sim_backend for p in preps}
+    return kinds.pop() if len(kinds) == 1 else "auto"
+
+
+def pool_simulations(preps: Sequence[DeferredSearch], *, firings: int,
+                     backend: str | None = None) -> list[SimResult]:
+    """Score many deferred searches' jobs in ONE ``simulate_batch`` call.
+
+    Concatenates every search's ``sim_jobs()``, runs the single batched
+    call (mixed topologies vectorize through the padded backend), and
+    distributes each search's slice back via ``attach_sim``.  ``backend``
+    forces a ``simulate_batch`` backend; by default the searches' own
+    ``sim_backend`` is used (falling back to "auto" when they disagree).
+    Returns the flat result list ([] when there was nothing to score) so
+    callers can record metadata such as the engines used."""
+    jobs, spans = gather_sim_jobs(preps, firings=firings)
+    if not jobs:
+        return []
+    results = simulate_batch(jobs, firings=firings,
+                             backend=_resolve_backend(preps, backend))
+    scatter_sim_results(preps, spans, results)
     return results
 
 
-def timed_pool_simulations(preps: Sequence[DeferredSearch], *,
-                           firings: int) -> tuple[list[SimResult], dict]:
+def measure_backend_speedup(jobs: Sequence[SimJob], *,
+                            firings: int) -> dict:
+    """Measured NumPy-vs-jax wall time on one job list (the BENCH JSON
+    ``sim.speedup`` block): times the padded NumPy sweep, then the jitted
+    sweep with its compilation warmed up outside the timed window (the
+    compile cost is reported separately as ``jax_compile_s``).  When jax
+    is unavailable the jax fields are None and ``speedup`` is None — the
+    figure is *measured*, never asserted.  Engine counters are restored
+    afterwards so gates on the main call's counts stay unpolluted."""
+    from repro.core.simulate import _ENGINE_INVOCATIONS, _jax_ready
+    jobs = list(jobs)
+    saved = dict(_ENGINE_INVOCATIONS)
+    try:
+        t0 = time.monotonic()
+        simulate_batch(jobs, firings=firings, backend="numpy")
+        numpy_wall = time.monotonic() - t0
+        out = {"jobs": len(jobs), "firings": firings,
+               "numpy_wall_s": numpy_wall, "jax_compile_s": None,
+               "jax_wall_s": None, "speedup": None}
+        if _jax_ready():
+            t0 = time.monotonic()
+            simulate_batch(jobs, firings=firings, backend="jax")  # warm-up
+            out["jax_compile_s"] = time.monotonic() - t0
+            t0 = time.monotonic()
+            simulate_batch(jobs, firings=firings, backend="jax")
+            out["jax_wall_s"] = time.monotonic() - t0
+            out["speedup"] = numpy_wall / max(out["jax_wall_s"], 1e-9)
+        return out
+    finally:
+        _ENGINE_INVOCATIONS.clear()
+        _ENGINE_INVOCATIONS.update(saved)
+
+
+def timed_pool_simulations(preps: Sequence[DeferredSearch], *, firings: int,
+                           backend: str | None = None,
+                           measure_speedup: bool = False,
+                           ) -> tuple[list[SimResult], dict]:
     """``pool_simulations`` plus the benchmark drivers' metadata recording:
     resets the global engine counters, times the batched call, and returns
     ``(results, meta)`` where ``meta`` is the JSON-ready dict every
     ``BENCH_*.json`` writer stores under its top-level ``"sim"`` key —
-    ``{firings, jobs, invocations, counts, backends, wall_s, analysis}`` —
-    and the CI regression gate inspects to prove the suite stayed
-    vectorized (and, via ``analysis``, that the static pre-flight gate
-    actually ran).  ``analysis`` is a *snapshot* of ``analysis_counts()``,
-    not a delta: drivers reset the counters up front so the snapshot also
-    covers the preparation phase's ``autobridge(check=True)`` verdicts."""
+    ``{firings, jobs, invocations, counts, backends, backend, wall_s,
+    analysis}`` — and the CI regression gate inspects to prove the suite
+    stayed vectorized (and, via ``analysis``, that the static pre-flight
+    gate actually ran).  ``analysis`` is a *snapshot* of
+    ``analysis_counts()``, not a delta: drivers reset the counters up
+    front so the snapshot also covers the preparation phase's
+    ``autobridge(check=True)`` verdicts.
+
+    When the jax backend is in play the jitted sweep's compile-cache
+    counters ride along as ``meta["jit_cache"]``, and
+    ``measure_speedup=True`` re-times the same job list under both array
+    backends into ``meta["speedup"]`` (``measure_backend_speedup``) —
+    after the counts snapshot, so the gates' counters stay clean."""
     from repro.analysis import analysis_counts
+    resolved = _resolve_backend(preps, backend)
     reset_engine_counts()
     t0 = time.monotonic()
-    results = pool_simulations(preps, firings=firings)
+    jobs, spans = gather_sim_jobs(preps, firings=firings)
+    results = (simulate_batch(jobs, firings=firings, backend=resolved)
+               if jobs else [])
     wall = time.monotonic() - t0
     counts = engine_counts()
     meta = {"firings": firings, "jobs": len(results),
             "invocations": sum(counts.values()), "counts": counts,
             "backends": sorted({r.engine for r in results}),
+            "backend": resolved,
             "wall_s": wall,
             "analysis": analysis_counts()}
+    if counts.get("jax"):
+        from repro.kernels.sim_sweep import sweep_cache_stats
+        meta["jit_cache"] = sweep_cache_stats()
+    if measure_speedup and jobs:
+        meta["speedup"] = measure_backend_speedup(jobs, firings=firings)
+    scatter_sim_results(preps, spans, results)
     return results, meta
 
 
@@ -390,6 +480,7 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
                          base_sim: SimResult | None = None,
                          jobs: int = 1,
                          static_check: bool = True,
+                         sim_backend: str = "auto",
                          **ab_kwargs) -> DeferredSearch:
     """Enumerate and physically score every search point, deferring the
     batched throughput simulation to the caller (see ``DeferredSearch``).
@@ -417,6 +508,10 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
               The produced frontier is bit-identical to
               ``static_check=False`` by the analyzer's soundness; only the
               doomed work disappears (counted by ``analysis_counts()``).
+    sim_backend — ``simulate_batch`` backend the deferred jobs should be
+              scored with ("auto"/"jax"/"numpy"/"event"); recorded on the
+              returned ``DeferredSearch`` and honored by
+              ``pool_simulations``/``timed_pool_simulations``.
     """
     model = model or PhysicalModel()
     space = space or SearchSpace()
@@ -516,7 +611,7 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
     return DeferredSearch(graph=graph, grid=grid, model=model,
                           candidates=cands, space_size=len(points),
                           base_sim=base_sim, pool=pool_stats,
-                          static_check=static_check)
+                          static_check=static_check, sim_backend=sim_backend)
 
 
 def _buffer_bits(plan: Plan, extra_capacity: dict[str, int]) -> dict[str, float]:
@@ -529,7 +624,7 @@ def _buffer_bits(plan: Plan, extra_capacity: dict[str, int]) -> dict[str, float]
 
 
 def _size_fifos(res: SearchResult, grid: SlotGrid, model: PhysicalModel,
-                firings: int) -> None:
+                firings: int, backend: str = "auto") -> None:
     """Profile-driven FIFO sizing of the frontier (one more batch call),
     plus the area-model feedback: both the sized design and its
     uniform-headroom twin are re-scored with their buffering footprint
@@ -557,7 +652,7 @@ def _size_fifos(res: SearchResult, grid: SlotGrid, model: PhysicalModel,
         jobs.append(SimJob(g, latency=dict(c.plan.depth),
                            extra_capacity=dict(c.sized_capacity)))
         jobs.append(c.plan.sim_job())
-    results = simulate_batch(jobs, firings=firings)
+    results = simulate_batch(jobs, firings=firings, backend=backend)
     res.sim_calls += 1
     for i, c in enumerate(frontier):
         sized, uniform = results[2 * i], results[2 * i + 1]
@@ -590,6 +685,7 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
                          fifo_firings: int | None = None,
                          jobs: int = 1,
                          static_check: bool = True,
+                         sim_backend: str = "auto",
                          **ab_kwargs) -> SearchResult:
     """Joint batched design-space search (see module docstring).
 
@@ -610,6 +706,8 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
     static_check — pre-flight static verification gate (see
                    ``prepare_design_space``); frontier unchanged by
                    construction, doomed candidates never simulated
+    sim_backend  — ``simulate_batch`` backend for the throughput scoring
+                   (and FIFO-sizing verification) calls
     ab_kwargs    — forwarded to ``autobridge`` (e.g. ``same_slot``)
 
     >>> from repro.core import (SearchSpace, SlotGrid, TaskGraphBuilder,
@@ -633,17 +731,19 @@ def explore_design_space(graph: TaskGraph, grid: SlotGrid, *,
                                 n_samples=n_samples, sample_seed=sample_seed,
                                 points=points, model=model, score=score,
                                 jobs=jobs, static_check=static_check,
-                                **ab_kwargs)
+                                sim_backend=sim_backend, **ab_kwargs)
     sim_calls = 0
     if sim_firings:
         prep.apply_static_gate(sim_firings)
         jobs_list = prep.sim_jobs()
         if jobs_list:
-            prep.attach_sim(simulate_batch(jobs_list, firings=sim_firings))
+            prep.attach_sim(simulate_batch(jobs_list, firings=sim_firings,
+                                           backend=sim_backend))
             sim_calls += 1
     res = prep.finish(sim_calls=sim_calls)
     if fifo_sizing and res.frontier:
-        _size_fifos(res, grid, model, fifo_firings or sim_firings or 200)
+        _size_fifos(res, grid, model, fifo_firings or sim_firings or 200,
+                    backend=sim_backend)
     return res
 
 
@@ -706,6 +806,7 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
                            jobs: int = 1,
                            proposer="uniform",
                            static_check: bool = True,
+                           sim_backend: str = "auto",
                            **ab_kwargs) -> ConvergedSearch:
     """Converging design-space search: iterate refine -> search until the
     Pareto frontier's hypervolume stops improving.
@@ -787,6 +888,7 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
                                     floorplan_cache=cache,
                                     base_sim=base_sim, jobs=jobs,
                                     static_check=static_check,
+                                    sim_backend=sim_backend,
                                     **ab_kwargs)
         if total_pool is not None and prep.pool is not None:
             total_pool.absorb(prep.pool)
@@ -796,7 +898,8 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
             jobs_list = prep.sim_jobs()
             if jobs_list:
                 prep.attach_sim(simulate_batch(jobs_list,
-                                               firings=sim_firings))
+                                               firings=sim_firings,
+                                               backend=sim_backend))
                 round_calls = 1
         base_sim = prep.base_sim
         sim_calls += round_calls
@@ -910,6 +1013,7 @@ def sweep_backends(graph: TaskGraph,
                    cache: FloorplanCache | None = None,
                    jobs: int = 1,
                    static_check: bool = True,
+                   sim_backend: str = "auto",
                    **ab_kwargs) -> BackendSweep:
     """One-call multi-device sweep: the same design searched across several
     device grids (U250/U280/TPU-pod shapes from ``repro.fpga.archs``), with
@@ -967,6 +1071,7 @@ def sweep_backends(graph: TaskGraph,
                                         sample_seed=sample_seed, model=model,
                                         floorplan_cache=cache, jobs=jobs,
                                         static_check=static_check,
+                                        sim_backend=sim_backend,
                                         **ab_kwargs)
              for name, g in named.items()}
     sim_calls = 0

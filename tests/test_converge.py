@@ -305,10 +305,11 @@ def test_simulate_batch_chunking_matches_unchunked():
             SimJob(g2, latency={"str_a[0]": 2},
                    extra_capacity={"str_a[0]": 4})]
     reset_engine_counts()
-    full = simulate_batch(jobs, firings=40)
+    full = simulate_batch(jobs, firings=40, backend="numpy")
     assert engine_counts()["numpy"] == 1
     reset_engine_counts()
-    chunked = simulate_batch(jobs, firings=40, max_bytes=1)  # 1 job/chunk
+    chunked = simulate_batch(jobs, firings=40, backend="numpy",
+                             max_bytes=1)                   # 1 job/chunk
     # engine counters report the chunk count
     assert engine_counts()["numpy"] == len(jobs)
     assert engine_counts()["event"] == 0
@@ -318,7 +319,7 @@ def test_simulate_batch_chunking_matches_unchunked():
     # an intermediate budget splits into fewer, larger chunks
     sim_mod = importlib.import_module("repro.core.simulate")
     reset_engine_counts()
-    two = simulate_batch(jobs, firings=40,
+    two = simulate_batch(jobs, firings=40, backend="numpy",
                          max_bytes=2 * sim_mod._job_bytes_estimate(jobs))
     assert 1 < engine_counts()["numpy"] <= len(jobs)
     assert [r.cycles for r in two] == [r.cycles for r in full]
@@ -327,7 +328,8 @@ def test_simulate_batch_chunking_matches_unchunked():
 def test_simulate_batch_default_budget_keeps_one_sweep():
     g = _chain_graph()
     reset_engine_counts()
-    simulate_batch([SimJob(g) for _ in range(20)], firings=30)
+    simulate_batch([SimJob(g) for _ in range(20)], firings=30,
+                   backend="numpy")
     assert engine_counts()["numpy"] == 1
 
 

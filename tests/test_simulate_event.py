@@ -1,8 +1,10 @@
 """Event-driven simulator tests: bit-for-bit equivalence against the
 per-cycle reference engine (randomized DAGs, reconvergent diamonds,
-dependency cycles, detached tasks), batch-engine parity, the almost-full
-headroom regression, and a perf smoke proving the engine does O(firings)
-work instead of O(cycles)."""
+dependency cycles, detached tasks), batch-engine parity across the NumPy
+and jax-jitted padded backends (three-way jit == numpy == event property
+test, bit-identical including ``steps``), the almost-full headroom
+regression, and a perf smoke proving the engine does O(firings) work
+instead of O(cycles)."""
 import random
 
 import pytest
@@ -11,6 +13,11 @@ from _propcheck import given, settings, strategies as st
 from repro.core import (SimJob, TaskGraphBuilder, pipeline_headroom,
                         simulate, simulate_batch)
 from repro.core.graph import Stream, Task, TaskGraph
+from repro.core.simulate import _jax_ready
+
+#: does backend="auto" promote to the jitted sweep in this environment?
+_HAVE_JAX = _jax_ready()
+jax_only = pytest.mark.skipif(not _HAVE_JAX, reason="jax not installed")
 
 
 def _random_graph(rng: random.Random, allow_cycle: bool = False) -> TaskGraph:
@@ -134,7 +141,7 @@ def test_batch_numpy_matches_event():
         jobs.append(SimJob(g, latency=lat,
                            extra_capacity=pipeline_headroom(lat),
                            ii={n: rng.randint(1, 3) for n in g.tasks}))
-    vec = simulate_batch(jobs, firings=60)
+    vec = simulate_batch(jobs, firings=60, backend="numpy")
     ref = simulate_batch(jobs, firings=60, backend="event")
     assert all(r.engine == "numpy-batch" for r in vec)
     assert all(r.engine == "event" for r in ref)
@@ -153,7 +160,7 @@ def test_batch_mixed_topologies_vectorize_via_padding():
     b.invoke("B", area={}, ins=["s"])
     other = b.build()
     jobs = [SimJob(_diamond()), SimJob(other)]
-    results = simulate_batch(jobs, firings=30)
+    results = simulate_batch(jobs, firings=30, backend="numpy")
     assert all(r.engine == "numpy-padded" for r in results)
     ref = simulate_batch(jobs, firings=30, backend="event")
     assert all(r.engine == "event" for r in ref)
@@ -193,7 +200,8 @@ def test_padded_backend_equivalence_mixed_topologies(seed):
     jobs = _random_mixed_jobs(seed)
     vec = simulate_batch(jobs, firings=25)
     ref = simulate_batch(jobs, firings=25, backend="event")
-    assert all(r.engine in ("numpy-batch", "numpy-padded") for r in vec)
+    assert all(r.engine in ("numpy-batch", "numpy-padded", "jax-padded")
+               for r in vec)
     for a, b in zip(vec, ref):
         assert (a.cycles, a.fired, a.deadlocked) == \
             (b.cycles, b.fired, b.deadlocked)
@@ -223,7 +231,8 @@ def test_fast_subset_designs_vectorize_with_exact_results():
               B.bucket_sort(), B.page_rank()]
     jobs = [SimJob(g) for g in graphs]
     vec = simulate_batch(jobs, firings=50)
-    assert all(r.engine == "numpy-padded" for r in vec)
+    want = "jax-padded" if _HAVE_JAX else "numpy-padded"
+    assert all(r.engine == want for r in vec)
     ref = [simulate(g, firings=50) for g in graphs]
     for a, b in zip(vec, ref):
         assert (a.cycles, a.fired, a.deadlocked) == \
@@ -238,11 +247,112 @@ def test_engine_invocation_counters():
     jobs = _random_mixed_jobs(7)
     reset_engine_counts()
     simulate_batch(jobs, firings=10)
-    assert engine_counts() == {"event": 0, "cycle": 0, "numpy": 1}
+    expected = {"event": 0, "cycle": 0, "numpy": 0, "jax": 0, "fallback": 0}
+    expected["jax" if _HAVE_JAX else "numpy"] = 1
+    assert engine_counts() == expected
     reset_engine_counts()
     simulate_batch(jobs, firings=10, backend="event")
     counts = engine_counts()
-    assert counts["numpy"] == 0 and counts["event"] == len(jobs)
+    assert counts["numpy"] == counts["jax"] == 0
+    assert counts["event"] == len(jobs)
+
+
+# ---------------------------------------------------------------------------
+# jax-jitted backend (bit-exact against the NumPy oracle)
+# ---------------------------------------------------------------------------
+
+@jax_only
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 99_999))
+def test_jax_backend_three_way_equivalence(seed):
+    """jit == numpy == event on randomized mixed batches.  The jitted
+    sweep's SimResults are bit-identical to the NumPy oracle's — including
+    the ``steps`` counter, i.e. the very same number of sweep iterations —
+    and both match per-job event simulation on cycles/fired/deadlock."""
+    jobs = _random_mixed_jobs(seed)
+    jx = simulate_batch(jobs, firings=25, backend="jax")
+    np_ = simulate_batch(jobs, firings=25, backend="numpy")
+    ev = simulate_batch(jobs, firings=25, backend="event")
+    assert all(r.engine == "jax-padded" for r in jx)
+    for a, b in zip(jx, np_):
+        assert (a.cycles, a.fired, a.deadlocked, a.steps) == \
+            (b.cycles, b.fired, b.deadlocked, b.steps)
+    for a, b in zip(jx, ev):
+        assert (a.cycles, a.fired, a.deadlocked) == \
+            (b.cycles, b.fired, b.deadlocked)
+
+
+@jax_only
+def test_auto_promotes_to_jax():
+    """backend="auto" resolves to the jitted sweep when jax imports and the
+    knobs are int32-safe — with zero fallback ticks."""
+    from repro.core import engine_counts, reset_engine_counts
+    jobs = _random_mixed_jobs(11)
+    reset_engine_counts()
+    out = simulate_batch(jobs, firings=10)
+    assert all(r.engine == "jax-padded" for r in out)
+    counts = engine_counts()
+    assert counts["jax"] == 1 and counts["numpy"] == 0
+    assert counts["fallback"] == 0
+
+
+@jax_only
+def test_jax_chunking_matches_unchunked():
+    """max_bytes chunking splits the jax sweep exactly like the NumPy one:
+    one engine invocation per chunk, results identical to the whole-batch
+    run."""
+    from repro.core import engine_counts, reset_engine_counts
+    jobs = _random_mixed_jobs(5)
+    whole = simulate_batch(jobs, firings=15, backend="jax")
+    reset_engine_counts()
+    chunked = simulate_batch(jobs, firings=15, backend="jax", max_bytes=1)
+    assert engine_counts()["jax"] == len(jobs)      # one sweep per chunk
+    for a, b in zip(whole, chunked):
+        assert (a.cycles, a.fired, a.deadlocked) == \
+            (b.cycles, b.fired, b.deadlocked)
+
+
+@jax_only
+def test_jax_backend_int32_guard_raises():
+    """Forcing backend="jax" past the sweep's int32 range is an error, not
+    a silent degrade."""
+    jobs = [SimJob(_diamond()), SimJob(_diamond())]
+    with pytest.raises(ValueError, match="int32"):
+        simulate_batch(jobs, firings=10, max_cycles=1 << 31, backend="jax")
+
+
+@jax_only
+def test_auto_int32_overflow_degrades_to_numpy_with_fallback_tick():
+    """auto with int32-unsafe knobs degrades to the NumPy backend — but
+    audibly: a warning plus an engine_counts()["fallback"] tick (what the
+    CI gate asserts is zero)."""
+    from repro.core import engine_counts, reset_engine_counts
+    jobs = [SimJob(_diamond()), SimJob(_diamond())]
+    reset_engine_counts()
+    with pytest.warns(UserWarning, match="int32"):
+        out = simulate_batch(jobs, firings=10, max_cycles=1 << 31)
+    assert all(r.engine == "numpy-batch" for r in out)
+    counts = engine_counts()
+    assert counts["fallback"] == 1 and counts["numpy"] == 1
+    assert counts["jax"] == 0
+
+
+@jax_only
+def test_jax_compile_cache_reuses_shapes():
+    """Recompilation is keyed by the bucketed padded shape only: re-running
+    the same batch with different scalar knobs (firings/max_cycles are
+    traced values) must hit the cache, not recompile."""
+    from repro.kernels.sim_sweep import (reset_sweep_cache_stats,
+                                         sweep_cache_stats)
+    jobs = _random_mixed_jobs(3)
+    reset_sweep_cache_stats()
+    simulate_batch(jobs, firings=10, backend="jax")
+    first = dict(sweep_cache_stats())
+    simulate_batch(jobs, firings=12, backend="jax")   # same shapes, new knobs
+    second = sweep_cache_stats()
+    assert first["compiles"] >= 1
+    assert second["compiles"] == first["compiles"]    # no recompilation
+    assert second["hits"] > first["hits"]
 
 
 def test_explorer_batched_throughput_eval():

@@ -18,7 +18,10 @@ from repro.core import (PhysicalModel, SearchPoint, SearchSpace,
                         TaskGraphBuilder, analyze_timing,
                         explore_design_space, sweep_backends)
 from repro.core import explorer as explorer_mod
+from repro.core.simulate import _jax_ready
 from repro.fpga import grid_for, tpu_pod_grid, u250_grid, u280_grid
+
+jax_only = pytest.mark.skipif(not _jax_ready(), reason="jax not installed")
 
 
 def _vecadd(pe=4):
@@ -204,7 +207,7 @@ def test_fmax_suite_fast_subset_is_one_padded_sweep():
                for name, board, graph in B.autobridge_suite()
                if name in fs.FAST_SUBSET]
     assert len(entries) >= 6          # 6 designs, some on both boards
-    sim = fs.score_all(entries, 60)
+    sim = fs.score_all(entries, 60, "numpy")
     assert sim["counts"]["numpy"] == 1
     assert sim["counts"]["event"] == 0
     assert sim["backends"] == ["numpy-padded"]
@@ -216,6 +219,107 @@ def test_fmax_suite_fast_subset_is_one_padded_sweep():
         assert r["sim_deadlock"] is False
         assert r["throughput_preserved"] is True
         assert r["backend_used"] == "numpy-padded"
+
+
+@jax_only
+def test_fmax_suite_jax_backend_matches_numpy_rows():
+    """Acceptance for the jitted backend at the suite level: scoring the
+    same designs with ``backend="jax"`` reproduces the NumPy rows exactly
+    (everything but wall time and the engine label), runs exactly one
+    jitted sweep with zero numpy/event/fallback ticks, and records the
+    jit compile-cache plus the measured NumPy-vs-jax speedup."""
+    fs = _load_bench("fmax_suite")
+    from repro.fpga import benchmarks as B
+    names = {"stencil_x2", "bucket_sort"}
+
+    def entries():
+        return [fs.prepare(name, board, graph)
+                for name, board, graph in B.autobridge_suite()
+                if name in names]
+
+    e_np = entries()
+    fs.score_all(e_np, 60, "numpy")
+    rows_np = [fs.finish(e, 60) for e in e_np]
+    e_jx = entries()
+    sim = fs.score_all(e_jx, 60, "jax")
+    rows_jx = [fs.finish(e, 60) for e in e_jx]
+    assert sim["counts"]["jax"] == 1
+    assert sim["counts"]["numpy"] == sim["counts"]["event"] == 0
+    assert sim["counts"]["fallback"] == 0
+    assert sim["backends"] == ["jax-padded"]
+    assert sim["jit_cache"]["compiles"] + sim["jit_cache"]["hits"] >= 1
+    assert sim["speedup"]["numpy_wall_s"] > 0       # measured, not asserted
+    assert sim["speedup"]["jax_wall_s"] > 0
+    for a, b in zip(rows_np, rows_jx):
+        assert b["backend_used"] == "jax-padded"
+        for k in a:
+            if k not in ("wall_s", "backend_used"):
+                assert a[k] == b[k], k
+
+
+def test_check_regression_jax_gate(tmp_path):
+    """check_jax_backend: a --backend jax run gated against the fresh
+    NumPy JSON — row-exact identity, jax counter > 0, zero silent
+    fallbacks, jit_cache presence."""
+    import json
+    cr = _load_bench("check_regression")
+
+    def doc(counts, *, backend, engine, opt=300.0, cycles=100, jit=False):
+        d = {
+            "suite": "fmax_suite",
+            "subset": ["stencil_x2"],
+            "backend": backend,
+            "rows": [{"name": "d", "board": "u280", "opt_mhz": opt,
+                      "cycles_opt": cycles, "backend_used": engine}],
+            "summary": {"opt_avg_mhz": opt, "sim_deadlocks": 0,
+                        "throughput_violations": 0},
+            "sim": {"counts": counts, "invocations": sum(counts.values()),
+                    "analysis": {"analyzed": 7, "doomed": 0, "skipped": 0,
+                                 "infeasible": 0}},
+        }
+        if jit:
+            d["sim"]["jit_cache"] = {"compiles": 1, "hits": 0}
+        return d
+
+    def write(name, d):
+        p = tmp_path / name
+        p.write_text(json.dumps(d))
+        return str(p)
+
+    NP = {"event": 0, "cycle": 0, "numpy": 1, "jax": 0, "fallback": 0}
+    JX = {"event": 0, "cycle": 0, "numpy": 0, "jax": 1, "fallback": 0}
+    base = write("base.json", doc(NP, backend="numpy", engine="numpy-padded"))
+    good = write("good.json",
+                 doc(JX, backend="jax", engine="jax-padded", jit=True))
+    assert cr.main([good, base]) == 0
+    # bit-exact identity: even an fmax IMPROVEMENT fails...
+    up = write("up.json", doc(JX, backend="jax", engine="jax-padded",
+                              opt=301.0, jit=True))
+    assert cr.main([up, base]) == 1
+    # ...as does any cycle-count divergence
+    cyc = write("cyc.json", doc(JX, backend="jax", engine="jax-padded",
+                                cycles=101, jit=True))
+    assert cr.main([cyc, base]) == 1
+    # silent degrade out of the jitted path: numpy ran under backend=jax
+    mixed = dict(JX, numpy=1)
+    deg = write("deg.json", doc(mixed, backend="jax", engine="jax-padded",
+                                jit=True))
+    assert cr.main([deg, base]) == 1
+    # the sweep never ran at all
+    off = write("off.json", doc(dict(JX, jax=0), backend="jax",
+                                engine="jax-padded", jit=True))
+    assert cr.main([off, base]) == 1
+    # a fallback tick fails
+    fb = write("fb.json", doc(dict(JX, fallback=1), backend="jax",
+                              engine="jax-padded", jit=True))
+    assert cr.main([fb, base]) == 1
+    # a row scored on the wrong engine fails
+    eng = write("eng.json", doc(JX, backend="jax", engine="numpy-padded",
+                                jit=True))
+    assert cr.main([eng, base]) == 1
+    # missing jit_cache counters fail
+    nojit = write("nojit.json", doc(JX, backend="jax", engine="jax-padded"))
+    assert cr.main([nojit, base]) == 1
 
 
 def test_check_regression_flags_event_fallback(tmp_path):
