@@ -34,6 +34,24 @@ regress beyond tolerance:
   actually ran, every row's ``backend_used`` must be ``jax-padded``, and
   any ``numpy``/``event``/``cycle`` invocation or ``fallback`` tick —
   a silent degrade out of the jitted path — fails.
+* fmax suite, chaos runs (``benchmarks/chaos_suite.py`` — the resumed
+  JSON carries a ``chaos`` block and CI passes the drill's clean
+  converged run as *baseline*): injected faults must be *survived
+  invisibly* — every per-design row bit-identical to the clean run (the
+  parallel-identity gate), the kill really delivered (``kill_returncode
+  == -SIGKILL``) and at least one design provably resumed from its
+  journal (``resumed_rounds > 0``), the pool counters nonzero where the
+  plan guarantees activity (``retried``/``pool_rebuilds``, injected
+  ``worker_crash``/``worker_hang``/``torn_write``), the reopened store
+  quarantined the torn entries, and — because the plan keeps every fault
+  transient — nothing was quarantined in the *pool* (a poison-point
+  verdict would legitimately move the frontier, so its absence is part
+  of the identity contract).
+* fmax suite, any run with a ``sim.store`` block (``--store``): the
+  determinism invariant ``conflicts == 0`` always holds (a conflict
+  means two processes solved the same key to different answers), and
+  outside chaos runs ``quarantined == 0`` — torn entries on a healthy
+  run mean the atomic-write path regressed.
 * throughput suite: per-design TAPA cycle counts must not grow more than
   ``--tol`` relative to baseline; every baseline design must still be
   present; the vectorization gate always applies (the throughput suite is
@@ -330,6 +348,104 @@ def check_jax_backend(cur: dict, base: dict) -> list[str]:
     return errors
 
 
+def check_store(cur: dict, *, label: str) -> list[str]:
+    """The disk-store invariants, gated on every run that used one.
+
+    ``conflicts`` counts concurrent writers that solved the same key to
+    *different* values — ``floorplan()`` is deterministic, so any conflict
+    is a correctness bug, chaos or not.  ``quarantined`` counts torn/
+    corrupt blobs swept aside; on a healthy (non-chaos) run the atomic
+    write-rename protocol makes that impossible, so nonzero means the
+    persistence path regressed."""
+    store = cur.get("sim", {}).get("store")
+    if store is None:
+        return []
+    errors = []
+    if store.get("conflicts", 0):
+        errors.append(
+            f"{label} store recorded {store['conflicts']} write "
+            f"conflict(s) — concurrent solves of the same key disagreed "
+            f"(determinism broken)"
+        )
+    if not cur.get("chaos") and store.get("quarantined", 0):
+        errors.append(
+            f"{label} store quarantined {store['quarantined']} entr(ies) "
+            f"without fault injection — atomic writes are tearing"
+        )
+    return errors
+
+
+def check_chaos(cur: dict, base: dict) -> list[str]:
+    """The chaos-drill gate: a fault-injected, killed-and-resumed converged
+    run vs the clean run it must reproduce (``benchmarks/chaos_suite.py``).
+
+    Row identity is delegated to ``check_parallel_frontier`` by the
+    caller; this check proves the drill actually drilled: the mid-suite
+    SIGKILL was delivered, at least one design resumed from its journal
+    rather than restarting, the injected faults really fired (injected
+    counters) and really bit (retries, pool rebuilds, store quarantines)
+    — and none of it escalated to a pool quarantine, which would have
+    (legitimately) moved the frontier and broken identity."""
+    errors = []
+    chaos = cur.get("chaos") or {}
+    if chaos.get("kill_returncode", 0) >= 0:
+        errors.append(
+            f"chaos run records kill_returncode="
+            f"{chaos.get('kill_returncode')!r} (expected a death by "
+            f"signal, i.e. negative)"
+        )
+    if not chaos.get("resumed"):
+        errors.append(
+            "chaos run never resumed a checkpoint journal (no design row "
+            "has resumed_rounds > 0) — the kill-resume path went untested"
+        )
+    if not any(r.get("resumed_rounds", 0) > 0 for r in cur.get("rows", ())):
+        errors.append(
+            "chaos block claims a resume but no row records "
+            "resumed_rounds > 0"
+        )
+    faults = cur.get("sim", {}).get("faults") or {}
+    if not faults.get("plan"):
+        errors.append("chaos run's sim.faults block records no fault plan")
+    injected = faults.get("injected", {})
+    for site in ("worker_crash", "worker_hang", "torn_write"):
+        if injected.get(site, 0) <= 0:
+            errors.append(
+                f"chaos run injected no {site} faults — the drill is "
+                f"vacuous for that failure mode"
+            )
+    obs = faults.get("observed", {})
+    if obs.get("retried", 0) <= 0:
+        errors.append(
+            "chaos run recorded no pool retries — injected faults were "
+            "never survived via re-dispatch"
+        )
+    if obs.get("pool_rebuilds", 0) <= 0:
+        errors.append(
+            "chaos run recorded no pool rebuilds — worker crashes never "
+            "reached the BrokenProcessPool recovery path"
+        )
+    if obs.get("store_quarantined", 0) <= 0:
+        errors.append(
+            "chaos run quarantined no store entries — torn writes were "
+            "injected but the reopened store never detected them"
+        )
+    if obs.get("quarantined", 0):
+        errors.append(
+            f"chaos run quarantined {obs['quarantined']} point(s) in the "
+            f"pool — the plan keeps faults transient, so a poison-point "
+            f"verdict means retry accounting broke (and row identity is "
+            f"void)"
+        )
+    if obs.get("merge_conflicts", 0):
+        errors.append(
+            f"chaos run recorded {obs['merge_conflicts']} cache merge "
+            f"conflict(s) — worker results disagreed with the parent's "
+            f"(determinism broken)"
+        )
+    return errors
+
+
 def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
     errors = []
     cs, bs = cur["summary"], base["summary"]
@@ -345,7 +461,13 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
         errors.append(
             f"{cs['throughput_violations']} design(s) lost steady-state throughput"
         )
-    if cur.get("converge") and base.get("converge"):
+    if cur.get("chaos"):
+        # chaos drill: fault-injected killed-and-resumed run vs clean run —
+        # exact row identity plus proof the faults fired and were survived
+        errors += check_converged_sim(cur, label="chaos run")
+        errors += check_parallel_frontier(cur, base)
+        errors += check_chaos(cur, base)
+    elif cur.get("converge") and base.get("converge"):
         # parallel-vs-sequential converged comparison: exact identity
         errors += check_converged_sim(cur, label="converged run")
         errors += check_parallel_frontier(cur, base)
@@ -358,6 +480,7 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
     elif cur.get("subset"):
         errors += check_sim(cur, label="fast subset")
     errors += check_analysis(cur, base, label="fmax suite")
+    errors += check_store(cur, label="fmax suite")
     cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
     for r in base["rows"]:
         key = (r["name"], r["board"])
@@ -373,6 +496,7 @@ def check_throughput(cur: dict, base: dict, tol: float) -> list[str]:
     # the throughput suite IS the CI fast suite: always gate vectorization
     errors = check_sim(cur, label="throughput suite")
     errors += check_analysis(cur, base, label="throughput suite")
+    errors += check_store(cur, label="throughput suite")
     cur_rows = {r["name"]: r for r in cur["rows"]}
     for r in base["rows"]:
         name = r["name"]

@@ -45,16 +45,29 @@ the jitted sweep's compile-cache counters (``sim.jit_cache``) and a
 *measured* NumPy-vs-jax ``sim.speedup`` block — the CI jax leg gates that
 run row-exact against a fresh NumPy JSON (``check_jax_backend``).
 
+Crash-safety (``docs/robustness-guide.md``): ``--store DIR`` keeps the
+converged run's floorplan solves in a content-addressed
+``DiskFloorplanStore`` shared across designs and *runs* (the JSON
+``sim.store`` block records writes/hits/quarantined-entry counts), and
+``--checkpoint DIR`` journals each design's search per round so a killed
+suite resumes from the last completed round with bit-identical rows —
+the chaos CI job (``benchmarks/chaos_suite.py``) SIGKILLs a run mid-suite
+under seeded fault injection and gates the resumed rows against a clean
+run.  The ``sim.faults`` block records injected-vs-observed fault counts
+(all zero on a clean run).
+
 CLI:
     python benchmarks/fmax_suite.py [--subset fast|full] [--json PATH]
                                     [--firings N] [--no-sim] [--converge]
                                     [--jobs N] [--proposer uniform|surrogate]
                                     [--backend auto|numpy|jax|event]
+                                    [--store DIR] [--checkpoint DIR]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from repro.analysis import analysis_counts, reset_analysis_counts
@@ -65,7 +78,10 @@ from repro.core import (FloorplanCache, InfeasibleError, Interval,
                         reset_floorplan_counts, search_until_converged,
                         timed_pool_simulations)
 from repro.fpga import benchmarks as B, grid_for
-from repro.search import pool_counts, reset_pool_counts
+from repro.search import (DiskFloorplanStore, fault_counts, pool_counts,
+                          reset_fault_counts, reset_pool_counts,
+                          reset_store_counts, store_counts)
+from repro.search.faults import active_plan
 
 UTIL_SWEEP = (0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.0)
 
@@ -169,11 +185,13 @@ def finish(entry: dict, sim_firings: int | None) -> dict:
 def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
                   cache: FloorplanCache, jobs: int = 1,
                   proposer: str = "uniform",
-                  backend: str = "auto") -> dict:
+                  backend: str = "auto",
+                  checkpoint: str | None = None) -> dict:
     """One design through ``search_until_converged``: continuous util range
     anchored on the discrete UTIL_SWEEP grid, shared floorplan cache.
     ``jobs`` fans the cold ILP solves over the worker pool (bit-identical
-    rows, less wall time); ``proposer`` selects the round-proposal model."""
+    rows, less wall time); ``proposer`` selects the round-proposal model;
+    ``checkpoint`` journals the search per round for kill-resume."""
     grid = grid_for(board)
     base_pl = packed_placement(graph, grid)
     base = analyze_timing(graph, grid, base_pl)
@@ -184,7 +202,8 @@ def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
         space=SearchSpace(utils=Interval(UTIL_SWEEP[0], UTIL_SWEEP[-1])),
         rounds=CONVERGE_ROUNDS, points_per_round=CONVERGE_POINTS,
         sim_firings=sim_firings, initial_points=anchors, cache=cache,
-        jobs=jobs, proposer=proposer, sim_backend=backend)
+        jobs=jobs, proposer=proposer, sim_backend=backend,
+        checkpoint=checkpoint)
     row = assemble_row(name, board, graph, grid, base_pl, base, res,
                        wall=time.monotonic() - t0, sim_firings=sim_firings)
     row.update({
@@ -193,6 +212,7 @@ def run_converged(name: str, board: str, graph, *, sim_firings: int | None,
         "points_evaluated": res.points_evaluated,
         "hypervolume": res.hypervolumes[-1] if res.hypervolumes else 0.0,
         "proposer": res.proposer,
+        "resumed_rounds": res.resumed_rounds,
     })
     return row
 
@@ -274,26 +294,36 @@ def main_converged(verbose: bool = True,
                    json_path: str | None = None,
                    jobs: int = 1,
                    proposer: str = "uniform",
-                   backend: str = "auto") -> list[dict]:
+                   backend: str = "auto",
+                   store: str | None = None,
+                   checkpoint: str | None = None) -> list[dict]:
     """The ``--converge`` path: per-design ``search_until_converged`` with a
     suite-wide ``FloorplanCache``; the JSON ``sim`` block carries the
     floorplan solve/cache-hit counters the CI gate checks, plus the
     ``pool`` worker dispatch/merge counters when ``jobs > 1`` (the
     parallel-run gate requires them and exact row identity vs the
-    sequential run)."""
+    sequential run).  ``store`` swaps the suite cache for a
+    ``DiskFloorplanStore`` (adds the ``sim.store`` block); ``checkpoint``
+    journals each design's search under ``DIR/<name>@<board>`` so a killed
+    suite run resumes — completed designs replay from their final
+    checkpoint, the interrupted one continues from its last round."""
     reset_engine_counts()
     reset_floorplan_counts()
     reset_pool_counts()
     reset_analysis_counts()
-    cache = FloorplanCache()
+    reset_store_counts()
+    reset_fault_counts()
+    cache = DiskFloorplanStore(store) if store else FloorplanCache()
     t0 = time.monotonic()
     rows = []
     for name, board, graph in B.autobridge_suite():
         if subset is not None and name not in subset:
             continue
+        ckpt = (os.path.join(checkpoint, f"{name}@{board}")
+                if checkpoint else None)
         r = run_converged(name, board, graph, sim_firings=sim_firings,
                           cache=cache, jobs=jobs, proposer=proposer,
-                          backend=backend)
+                          backend=backend, checkpoint=ckpt)
         rows.append(r)
         if verbose:
             base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
@@ -305,10 +335,22 @@ def main_converged(verbose: bool = True,
     fp = floorplan_counts()
     pool = {"jobs": jobs, **pool_counts()}
     ana = analysis_counts()
+    plan = active_plan()
+    store_block = (dict(store_counts(), entries=cache.disk_entries())
+                   if isinstance(cache, DiskFloorplanStore) else None)
+    faults_block = {
+        "plan": plan.as_dict() if plan is not None else None,
+        "injected": fault_counts(),
+        "observed": {k: pool[k] for k in ("retried", "timed_out",
+                                          "quarantined", "pool_rebuilds")}
+        | {"store_quarantined": store_counts()["quarantined"],
+           "merge_conflicts": fp["merge_conflicts"]},
+    }
     sim_meta = {"firings": sim_firings, "mode": "converged",
                 "counts": engine_counts(), "floorplan": fp,
                 "cache": cache.stats(), "pool": pool,
                 "analysis": ana,
+                "store": store_block, "faults": faults_block,
                 "proposer": proposer, "backend": backend,
                 "points_evaluated": sum(r["points_evaluated"] for r in rows),
                 "wall_s": time.monotonic() - t0}
@@ -327,6 +369,17 @@ def main_converged(verbose: bool = True,
     print(f"fmax_suite,ANALYSIS,0,analyzed={ana['analyzed']} "
           f"doomed={ana['doomed']} skipped={ana['skipped']} "
           f"infeasible={ana['infeasible']}")
+    if store_block is not None:
+        print(f"fmax_suite,STORE,0,entries={store_block['entries']} "
+              f"writes={store_block['writes']} "
+              f"disk_hits={store_block['disk_hits']} "
+              f"quarantined={store_block['quarantined']}")
+    if plan is not None:
+        obs = faults_block["observed"]
+        print(f"fmax_suite,FAULTS,0,injected={faults_block['injected']} "
+              f"retried={obs['retried']} timed_out={obs['timed_out']} "
+              f"quarantined={obs['quarantined']} "
+              f"pool_rebuilds={obs['pool_rebuilds']}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "fmax_suite", "converge": True,
@@ -365,13 +418,22 @@ if __name__ == "__main__":
                     help="simulate_batch backend for the simulation phase "
                          "(jax additionally records sim.jit_cache and a "
                          "measured sim.speedup block)")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="converged mode: persist floorplan solves to a "
+                         "content-addressed DiskFloorplanStore at DIR "
+                         "(shared across designs and runs; sim.store block)")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="converged mode: journal each design's search per "
+                         "round under DIR so a killed run resumes with "
+                         "bit-identical rows")
     args = ap.parse_args()
     sim = None if args.no_sim else (args.firings or None)
     subset = FAST_SUBSET if args.subset == "fast" else None
     if args.converge:
         main_converged(sim_firings=sim, subset=subset,
                        json_path=args.json_path, jobs=args.jobs,
-                       proposer=args.proposer, backend=args.backend)
+                       proposer=args.proposer, backend=args.backend,
+                       store=args.store, checkpoint=args.checkpoint)
     else:
         main(sim_firings=sim, subset=subset, json_path=args.json_path,
              backend=args.backend)

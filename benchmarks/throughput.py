@@ -11,6 +11,12 @@ design's best Pareto-frontier candidate.
 CLI:
     python benchmarks/throughput.py [--json PATH] [--firings N]
                                     [--backend auto|numpy|jax|event]
+                                    [--store DIR]
+
+``--store DIR`` routes every floorplan solve through a shared
+content-addressed ``DiskFloorplanStore`` — a second run against the same
+DIR is solve-free (all disk hits) and the JSON gains a ``sim.store``
+block with the hit/write counters.
 """
 from __future__ import annotations
 
@@ -21,13 +27,16 @@ from repro.analysis import reset_analysis_counts
 from repro.core import (SearchSpace, prepare_design_space,
                         timed_pool_simulations)
 from repro.fpga import benchmarks as B, u250_grid, u280_grid
+from repro.search import DiskFloorplanStore, reset_store_counts, store_counts
 
 DEFAULT_FIRINGS = 300
 
 
 def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None,
-        backend: str = "auto"):
+        backend: str = "auto", store: str | None = None):
     reset_analysis_counts()
+    reset_store_counts()
+    cache = DiskFloorplanStore(store) if store else None
     designs = [
         ("cnn_13x4", B.cnn(4), u250_grid()),
         ("gaussian_12", B.gaussian(12), u250_grid()),
@@ -36,7 +45,8 @@ def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None,
         ("stencil_x4", B.stencil(4), u250_grid()),
     ]
     space = SearchSpace(utils=(0.70, 0.75, 0.80))
-    preps = [(name, prepare_design_space(graph, grid, space=space))
+    preps = [(name, prepare_design_space(graph, grid, space=space,
+                                         floorplan_cache=cache))
              for name, graph, grid in designs]
 
     # the suite's whole simulation phase: one padded cross-design batch
@@ -68,6 +78,14 @@ def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None,
           f"invocations={sim_meta['invocations']} "
           f"backends={'+'.join(sim_meta['backends'])} "
           f"wall={sim_meta['wall_s']:.3f}s")
+    if cache is not None:
+        sim_meta = dict(sim_meta,
+                        store=dict(store_counts(),
+                                   entries=cache.disk_entries()))
+        st = sim_meta["store"]
+        print(f"throughput,STORE,0,entries={st['entries']} "
+              f"writes={st['writes']} disk_hits={st['disk_hits']} "
+              f"quarantined={st['quarantined']}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "throughput", "firings": firings,
@@ -85,12 +103,15 @@ def main():
     ap.add_argument("--backend", choices=("auto", "numpy", "jax", "event"),
                     default="auto",
                     help="simulate_batch backend for the batched scoring")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="persist floorplan solves to a DiskFloorplanStore "
+                         "at DIR (re-runs become solve-free)")
     args = ap.parse_args()
     if args.firings <= 0:
         ap.error("--firings must be positive (the cycle columns ARE the "
                  "benchmark; use fmax_suite.py --no-sim for a sim-free run)")
     run(firings=args.firings, json_path=args.json_path,
-        backend=args.backend)
+        backend=args.backend, store=args.store)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,8 @@ from .simulate import (SimJob, SimResult, StreamProfile, engine_counts,
 #: ``__getattr__`` below to break the core <-> search import cycle)
 _SEARCH_EXPORTS = (
     "BackendSweep", "Candidate", "ConvergedSearch", "DeferredSearch",
-    "Interval", "SearchPoint", "SearchResult", "SearchSpace",
+    "DiskFloorplanStore", "FaultPlan", "Interval", "SearchJournal",
+    "SearchPoint", "SearchResult", "SearchSpace",
     "best_candidate", "explore_design_space", "explore_floorplans",
     "gather_sim_jobs", "hypervolume", "measure_backend_speedup",
     "pareto_frontier", "pareto_indices", "pool_simulations",

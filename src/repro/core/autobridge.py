@@ -48,14 +48,14 @@ from .simulate import SimJob, SimResult, simulate_batch
 # answered from memory.  ``floorplan_counts()`` adds the bipartition-solver
 # invocation count from ``ilp`` so a sweep can report exactly how many ILPs
 # it paid for versus how many points it evaluated.
-_FP_COUNTS = {"solved": 0, "cache_hits": 0}
+_FP_COUNTS = {"solved": 0, "cache_hits": 0, "merge_conflicts": 0}
 
 
 def reset_floorplan_counts() -> None:
     """Zero the global floorplan solve/cache-hit counters (and the
     underlying bipartition-solver counter)."""
-    _FP_COUNTS["solved"] = 0
-    _FP_COUNTS["cache_hits"] = 0
+    for k in _FP_COUNTS:
+        _FP_COUNTS[k] = 0
     reset_solve_counts()
 
 
@@ -80,6 +80,7 @@ def merge_floorplan_counts(delta: dict[str, int]) -> None:
     where the solve actually ran."""
     _FP_COUNTS["solved"] += int(delta.get("solved", 0))
     _FP_COUNTS["cache_hits"] += int(delta.get("cache_hits", 0))
+    _FP_COUNTS["merge_conflicts"] += int(delta.get("merge_conflicts", 0))
     merge_solve_counts(delta.get("ilp_bipartitions", 0))
 
 
@@ -109,6 +110,20 @@ def _grid_signature(grid: SlotGrid) -> tuple:
     )
 
 
+def _entry_values_equal(a: tuple[str, object], b: tuple[str, object]) -> bool:
+    """Do two cache entries agree?  ``floorplan()`` is deterministic, so
+    two entries under one key must: ``merge`` and the disk store count a
+    disagreement (``merge_conflicts``/``conflicts``) instead of letting
+    first-writer-wins hide solver nondeterminism."""
+    if a[0] != b[0]:
+        return False
+    if a[0] == "err":
+        return a[1] == b[1]
+    fa, fb = a[1], b[1]
+    return (fa.placement == fb.placement
+            and abs(fa.cost - fb.cost) <= 1e-9 * max(1.0, abs(fb.cost)))
+
+
 class FloorplanCache:
     """Memoizes ``floorplan()`` solves (and infeasibility verdicts) across
     explorer calls, refine rounds and device sweeps.
@@ -128,12 +143,31 @@ class FloorplanCache:
         self._entries: dict[tuple, tuple[str, object]] = {}
         self.hits = 0
         self.misses = 0
+        #: ``merge``d duplicates whose values disagreed (should stay 0:
+        #: ``floorplan()`` is deterministic — nonzero means nondeterminism)
+        self.merge_conflicts = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def __contains__(self, key: tuple) -> bool:
-        return key in self._entries
+        return self._lookup(key) is not None
+
+    # Storage hooks.  Every read goes through ``_lookup`` and every write
+    # through ``_put`` so a subclass can add a second storage tier — the
+    # disk-backed ``repro.search.store.DiskFloorplanStore`` overrides
+    # exactly these two to fall through memory -> disk -> solve and to
+    # persist new entries atomically.
+    def _lookup(self, key: tuple) -> tuple[str, object] | None:
+        return self._entries.get(key)
+
+    def _put(self, key: tuple, value: tuple[str, object]) -> bool:
+        """Store ``value`` unless ``key`` is already present (first writer
+        wins); returns True when the entry was actually added."""
+        if key in self._entries:
+            return False
+        self._entries[key] = value
+        return True
 
     def stats(self) -> dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,
@@ -145,29 +179,37 @@ class FloorplanCache:
         pool use this to cache *static-analysis* verdicts so a doomed
         configuration is never re-analyzed — a later ``solve()`` or check
         under the same key raises the cached ``InfeasibleError``."""
-        self._entries.setdefault(key, ("err", reason))
+        if self._lookup(key) is None:
+            self._put(key, ("err", reason))
 
     def cached_error(self, key: tuple) -> str | None:
         """The cached infeasibility reason under ``key``, if any."""
-        hit = self._entries.get(key)
+        hit = self._lookup(key)
         return hit[1] if hit is not None and hit[0] == "err" else None
 
     def merge(self, other: "FloorplanCache") -> int:
         """Adopt ``other``'s entries (a worker's cache shipped back from a
         subprocess); returns the number of entries actually added.
 
-        First writer wins on key conflicts — harmless, because
-        ``floorplan()`` is deterministic, so two caches can only ever hold
-        *identical* values under the same key (property-tested against
-        interleaved single-process solves).  ``hits``/``misses`` are NOT
+        First writer wins on key conflicts, but a conflicting *value*
+        under an existing key is never dropped silently: ``floorplan()``
+        is deterministic, so two caches can only ever hold identical
+        values under the same key — a disagreement ticks
+        ``merge_conflicts`` (instance + global counter, surfaced in BENCH
+        JSON and gated to 0 in CI) because it means solver nondeterminism
+        corrupted the bit-identity contract.  ``hits``/``misses`` are NOT
         merged: they describe each object's own lookup history, and the
         global solve counters are merged separately via
         ``merge_floorplan_counts``."""
         added = 0
         for k, v in other._entries.items():
-            if k not in self._entries:
-                self._entries[k] = v
+            cur = self._lookup(k)
+            if cur is None:
+                self._put(k, v)
                 added += 1
+            elif not _entry_values_equal(cur, v):
+                self.merge_conflicts += 1
+                _FP_COUNTS["merge_conflicts"] += 1
         return added
 
     @staticmethod
@@ -185,7 +227,7 @@ class FloorplanCache:
         k = self.key(graph, grid, max_util=max_util, same_slot=same_slot,
                      seed=seed, exact_threshold=exact_threshold,
                      n_starts=n_starts, time_limit_s=time_limit_s)
-        hit = self._entries.get(k)
+        hit = self._lookup(k)
         if hit is not None:
             self.hits += 1
             _FP_COUNTS["cache_hits"] += 1
@@ -201,9 +243,9 @@ class FloorplanCache:
                            exact_threshold=exact_threshold,
                            n_starts=n_starts, time_limit_s=time_limit_s)
         except InfeasibleError as err:
-            self._entries[k] = ("err", str(err))
+            self._put(k, ("err", str(err)))
             raise
-        self._entries[k] = ("ok", fp)
+        self._put(k, ("ok", fp))
         return fp
 
 

@@ -10,7 +10,14 @@ Everything the co-optimization search offers lives here:
                   ``sweep_backends`` (one-call multi-device sweeps) and the
                   deferred-scoring plumbing (``DeferredSearch``);
 * ``pool``      — the process-pool execution layer: parallel cold ILP
-                  solves with mergeable caches/counters (``jobs=``);
+                  solves with mergeable caches/counters (``jobs=``), with
+                  per-future timeouts, crash recovery and poison-point
+                  quarantine built in;
+* ``store``     — crash-consistent persistence: the content-addressed
+                  ``DiskFloorplanStore`` and the per-round checkpoint
+                  journal behind ``search_until_converged(checkpoint=)``;
+* ``faults``    — the seeded deterministic fault-injection harness the
+                  robustness tests and the CI chaos job drive;
 * ``surrogate`` — response-surface-guided round proposals (``proposer=``).
 
 ``repro.core.explorer`` re-exports this module's names for backward
@@ -24,10 +31,14 @@ from .engine import (BackendSweep, Candidate, ConvergedSearch,
                      prepare_design_space, scatter_sim_results,
                      search_until_converged, sweep_backends,
                      timed_pool_simulations)
+from .faults import (FaultPlan, fault_counts, install as install_faults,
+                     reset_fault_counts)
 from .pareto import hypervolume, objective_vector, pareto_indices
 from .pool import (PoolStats, pool_counts, reset_pool_counts,
                    warm_floorplan_cache)
 from .space import DEFAULT_UTILS, Interval, SearchPoint, SearchSpace
+from .store import (DiskFloorplanStore, SearchJournal, key_digest,
+                    reset_store_counts, store_counts)
 from .surrogate import (ResponseSurface, SurrogateProposer, UniformProposer,
                         make_proposer)
 
@@ -41,6 +52,9 @@ __all__ = [
     "hypervolume", "objective_vector", "pareto_indices",
     "PoolStats", "pool_counts", "reset_pool_counts", "warm_floorplan_cache",
     "DEFAULT_UTILS", "Interval", "SearchPoint", "SearchSpace",
+    "FaultPlan", "fault_counts", "install_faults", "reset_fault_counts",
+    "DiskFloorplanStore", "SearchJournal", "key_digest",
+    "reset_store_counts", "store_counts",
     "ResponseSurface", "SurrogateProposer", "UniformProposer",
     "make_proposer",
 ]

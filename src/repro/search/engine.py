@@ -70,10 +70,12 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import os
 import time
 from typing import Callable, Mapping, Sequence
 
-from repro.core.autobridge import FloorplanCache, Plan, autobridge
+from repro.core.autobridge import (FloorplanCache, Plan, _graph_signature,
+                                   _grid_signature, autobridge)
 from repro.core.balance import CycleError, balance_graph
 from repro.core.devicegrid import SlotGrid
 from repro.core.fmax_model import PhysicalModel, TimingReport, analyze_timing
@@ -84,10 +86,12 @@ from repro.core.simulate import (SimJob, SimResult, StreamProfile,
                                  engine_counts, reset_engine_counts,
                                  simulate, simulate_batch)
 
+from . import faults
 from .pareto import hypervolume, objective_vector, pareto_indices
 from .pool import PoolStats, warm_floorplan_cache
 from .space import (DEFAULT_UTILS, Interval, SearchPoint,  # noqa: F401
                     SearchSpace)
+from .store import DiskFloorplanStore, SearchJournal, key_digest
 from .surrogate import make_proposer
 
 
@@ -782,6 +786,11 @@ class ConvergedSearch:
     jobs: int = 1
     #: aggregated worker-pool activity across rounds (None when ``jobs=1``)
     pool: PoolStats | None = None
+    #: completed rounds restored from a checkpoint instead of re-run
+    #: (0 for a fresh, un-checkpointed or from-scratch search)
+    resumed_rounds: int = 0
+    #: the checkpoint directory this search journals to (None = volatile)
+    checkpoint_dir: str | None = None
 
     @property
     def rounds_run(self) -> int:
@@ -807,6 +816,7 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
                            proposer="uniform",
                            static_check: bool = True,
                            sim_backend: str = "auto",
+                           checkpoint: str | os.PathLike | None = None,
                            **ab_kwargs) -> ConvergedSearch:
     """Converging design-space search: iterate refine -> search until the
     Pareto frontier's hypervolume stops improving.
@@ -838,6 +848,17 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
     and revisited knob values skip the ILP solve entirely —
     ``floorplan_counts()`` proves it (solves < points evaluated, hits > 0).
 
+    ``checkpoint=dir`` makes the whole search crash-safe: floorplan solves
+    persist to a ``DiskFloorplanStore`` under ``dir/store`` (unless an
+    explicit ``cache`` is passed) and the end-of-round loop state is
+    journaled to ``dir`` (``SearchJournal``), so a process killed at any
+    point — even mid-write — resumes from the last completed round and
+    reproduces the uninterrupted run's frontier *bit for bit*.  Resuming
+    with different search arguments is refused (config fingerprint); a
+    search that already ran to completion replays instantly from its final
+    checkpoint, with ``resumed_rounds`` saying how much was restored.  See
+    ``docs/robustness-guide.md``.
+
     >>> from repro.core import (Interval, SearchSpace, SlotGrid,
     ...                         TaskGraphBuilder, search_until_converged)
     >>> b = TaskGraphBuilder("chain")
@@ -859,8 +880,28 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
     model = model or PhysicalModel()
     space = space or SearchSpace()
     cur_space = space
-    cache = cache or FloorplanCache()
     prop = make_proposer(proposer)
+
+    journal: SearchJournal | None = None
+    if checkpoint is not None:
+        if cache is None:
+            cache = DiskFloorplanStore(os.path.join(checkpoint, "store"))
+        # everything that shapes the produced frontier must match for a
+        # resume to reproduce the uninterrupted run (jobs / sim_backend /
+        # cache are excluded on purpose: bit-identity is their contract)
+        config = {
+            "graph": key_digest(_graph_signature(graph)),
+            "grid": key_digest(_grid_signature(grid)),
+            "space": repr(space), "rounds": rounds, "tol": tol,
+            "points_per_round": points_per_round,
+            "sim_firings": sim_firings, "sample_seed": sample_seed,
+            "initial_points": repr(tuple(initial_points or ())),
+            "proposer": getattr(prop, "name", type(prop).__name__),
+            "static_check": static_check,
+            "ab_kwargs": repr(tuple(sorted(ab_kwargs.items()))),
+        }
+        journal = SearchJournal(checkpoint, config=config)
+    cache = cache if cache is not None else FloorplanCache()
     total_pool = PoolStats(jobs=max(jobs, 1)) if jobs > 1 else None
     pts: list[SearchPoint] = list(initial_points or ())
     if len(pts) < points_per_round:
@@ -882,8 +923,50 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
     points_evaluated = 0
     converged = False
     frontier: list[Candidate] = []
+    start_round = 0
+    resumed_rounds = 0
 
-    for r in range(max(rounds, 1)):
+    state = journal.load_latest() if journal is not None else None
+    if state is not None:
+        cur_space = state["cur_space"]
+        pts = state["pts"]
+        results = state["results"]
+        evaluated = state["evaluated"]
+        seen_pts = state["seen_pts"]
+        hvs = state["hvs"]
+        ref = state["ref"]
+        base_sim = state["base_sim"]
+        sim_calls = state["sim_calls"]
+        points_evaluated = state["points_evaluated"]
+        converged = state["converged"]
+        frontier = pareto_frontier(evaluated)
+        start_round = state["round_next"]
+        resumed_rounds = state["round"] + 1
+        if state.get("pool") is not None:
+            if total_pool is not None:
+                total_pool.absorb(state["pool"])
+            else:
+                total_pool = state["pool"]
+
+    def _checkpoint_round(r: int) -> None:
+        """Persist the end-of-round state (the commit point resume trusts)
+        then visit the ``parent_kill`` fault site — the chaos drill
+        SIGKILLs exactly here, after the state is durable."""
+        if journal is not None:
+            journal.save_round(r, {
+                "round_next": r + 1, "cur_space": cur_space, "pts": pts,
+                "results": results, "evaluated": evaluated,
+                "seen_pts": seen_pts, "hvs": hvs, "ref": ref,
+                "base_sim": base_sim, "sim_calls": sim_calls,
+                "points_evaluated": points_evaluated,
+                "converged": converged, "pool": total_pool,
+                "hypervolume": hvs[-1] if hvs else None,
+                "frontier_size": len(frontier)})
+        faults.fire("parent_kill", str(r))
+
+    for r in range(start_round, max(rounds, 1)):
+        if converged:
+            break
         prep = prepare_design_space(graph, grid, points=pts, model=model,
                                     floorplan_cache=cache,
                                     base_sim=base_sim, jobs=jobs,
@@ -916,6 +999,7 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
             # nothing feasible yet: re-sample fresh points and try again
             pts = cur_space.sample(points_per_round,
                                    seed=sample_seed + r + 1)
+            _checkpoint_round(r)
             continue
         if ref is None:
             vecs = [_objective(c) for c in evaluated if c.plan is not None
@@ -926,6 +1010,7 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
             prev = hvs[-2]
             if hvs[-1] - prev <= tol * max(abs(prev), 1e-12):
                 converged = True
+                _checkpoint_round(r)
                 break
         if r + 1 < max(rounds, 1):
             anchors = [c.point for c in frontier if c.point is not None]
@@ -941,6 +1026,7 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
                 if p not in have:
                     have.add(p)
                     pts.append(p)
+        _checkpoint_round(r)
 
     return ConvergedSearch(rounds=results, frontier=frontier,
                            hypervolumes=hvs, ref=ref, converged=converged,
@@ -948,7 +1034,11 @@ def search_until_converged(graph: TaskGraph, grid: SlotGrid, *,
                            points_evaluated=points_evaluated, cache=cache,
                            proposer=getattr(prop, "name",
                                             type(prop).__name__),
-                           jobs=max(jobs, 1), pool=total_pool)
+                           jobs=max(jobs, 1), pool=total_pool,
+                           resumed_rounds=resumed_rounds,
+                           checkpoint_dir=(os.fspath(checkpoint)
+                                           if checkpoint is not None
+                                           else None))
 
 
 # ---------------------------------------------------------------------------

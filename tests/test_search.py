@@ -219,16 +219,20 @@ def test_merge_floorplan_counts_aggregates():
 
 def test_pool_stats_absorb():
     a = PoolStats(jobs=2, dispatched=3, merged=3, worker_solves=5,
-                  worker_infeasible=1, wall_s=0.5, static_skipped=1)
+                  worker_infeasible=1, wall_s=0.5, static_skipped=1,
+                  retried=2, timed_out=1, quarantined=1, pool_rebuilds=1)
     b = PoolStats(jobs=4, dispatched=2, merged=2, worker_solves=2,
-                  wall_s=0.25, static_skipped=2)
+                  wall_s=0.25, static_skipped=2, retried=1, pool_rebuilds=2)
     a.absorb(b)
     assert (a.jobs, a.dispatched, a.merged, a.worker_solves,
             a.worker_infeasible, a.static_skipped) == (4, 5, 5, 7, 1, 3)
+    assert (a.retried, a.timed_out, a.quarantined,
+            a.pool_rebuilds) == (3, 1, 1, 3)
     assert a.wall_s == pytest.approx(0.75)
     assert set(a.as_dict()) == {"jobs", "dispatched", "merged",
                                 "worker_solves", "worker_infeasible",
-                                "wall_s", "static_skipped"}
+                                "wall_s", "static_skipped", "retried",
+                                "timed_out", "quarantined", "pool_rebuilds"}
 
 
 # ---------------------------------------------------------------------------
@@ -312,6 +316,25 @@ def test_floorplan_cache_merge_first_writer_wins_and_counts():
     assert len(parent) == 2
     # merge does not rewrite lookup history
     assert parent.hits == parent.misses == 0
+
+
+def test_merge_detects_conflicting_values_and_keeps_first():
+    reset_floorplan_counts()
+    a, b = FloorplanCache(), FloorplanCache()
+    a.record_infeasible(("k",), "reason A")
+    b.record_infeasible(("k",), "reason B")
+    b.record_infeasible(("k2",), "only in b")
+    parent = FloorplanCache()
+    assert parent.merge(a) == 1
+    assert parent.merge(b) == 1                 # k2 added, k kept as a's
+    assert parent.merge_conflicts == 1
+    assert floorplan_counts()["merge_conflicts"] == 1
+    assert parent.cached_error(("k",)) == "reason A"
+    # agreeing duplicates are not conflicts
+    c = FloorplanCache()
+    c.record_infeasible(("k",), "reason A")
+    assert parent.merge(c) == 0
+    assert parent.merge_conflicts == 1
 
 
 # ---------------------------------------------------------------------------

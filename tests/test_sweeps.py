@@ -377,3 +377,130 @@ def test_check_regression_flags_event_fallback(tmp_path):
     tfell = write("tfell.json", tdoc({"event": 5, "cycle": 0, "numpy": 0}))
     assert cr.main([tbase, tbase]) == 0
     assert cr.main([tfell, tbase]) == 1
+
+
+def test_check_regression_chaos_gate(tmp_path):
+    """check_chaos + check_store: the chaos drill's resumed JSON gated
+    against the clean converged run — row identity plus proof the faults
+    fired (injected counters), bit (retries/rebuilds/store quarantines)
+    and never escalated (zero pool quarantines / merge conflicts)."""
+    import json
+    cr = _load_bench("check_regression")
+
+    COUNTS = {"event": 0, "cycle": 0, "numpy": 3, "jax": 0, "fallback": 0}
+
+    def doc(*, chaos=True, opt=300.0, resumed_rounds=1, kill_rc=-9,
+            retried=4, timed_out=1, rebuilds=2, pool_quar=0,
+            store_quar=3, conflicts=0, merge_conflicts=0, injected=None):
+        if injected is None:
+            injected = {"worker_crash": 5, "worker_hang": 2,
+                        "torn_write": 3, "parent_kill": 0}
+        row = {"name": "d", "board": "u280", "opt_mhz": opt, "util": 0.8,
+               "frontier": 2, "hypervolume": 1.5, "rounds_run": 3,
+               "points_evaluated": 18, "cycles_opt": 100, "cycles_base": 90,
+               "resumed_rounds": resumed_rounds if chaos else 0}
+        d = {
+            "suite": "fmax_suite", "converge": True, "subset": ["d"],
+            "rows": [row],
+            "summary": {"opt_avg_mhz": opt, "sim_deadlocks": 0,
+                        "throughput_violations": 0},
+            "sim": {
+                "counts": COUNTS, "points_evaluated": 18,
+                "floorplan": {"solved": 9, "cache_hits": 12,
+                              "merge_conflicts": 0, "ilp_bipartitions": 20},
+                "pool": {"jobs": 2, "dispatched": 9, "merged": 9,
+                         "worker_solves": 9, "worker_infeasible": 0,
+                         "retried": retried if chaos else 0,
+                         "timed_out": timed_out if chaos else 0,
+                         "quarantined": pool_quar,
+                         "pool_rebuilds": rebuilds if chaos else 0},
+                "analysis": {"analyzed": 7, "doomed": 0, "skipped": 0,
+                             "infeasible": 0},
+                "store": {"writes": 9, "disk_hits": 0, "disk_misses": 18,
+                          "quarantined": store_quar if chaos else 0,
+                          "evictions": 0, "conflicts": conflicts,
+                          "entries": 9},
+                "faults": {
+                    "plan": ({"seed": 7, "worker_crash": 0.25}
+                             if chaos else None),
+                    "injected": (injected if chaos else
+                                 dict.fromkeys(injected, 0)),
+                    "observed": {
+                        "retried": retried if chaos else 0,
+                        "timed_out": timed_out if chaos else 0,
+                        "quarantined": pool_quar,
+                        "pool_rebuilds": rebuilds if chaos else 0,
+                        "store_quarantined": store_quar if chaos else 0,
+                        "merge_conflicts": merge_conflicts},
+                },
+            },
+        }
+        if chaos:
+            d["chaos"] = {"killed_runs": 1, "kill_returncode": kill_rc,
+                          "resumed": resumed_rounds > 0,
+                          "resumed_designs": ["d"] if resumed_rounds else [],
+                          "fault_plan": {"seed": 7}}
+        return d
+
+    def write(name, d):
+        p = tmp_path / name
+        p.write_text(json.dumps(d))
+        return str(p)
+
+    base = write("base.json", doc(chaos=False))
+    good = write("good.json", doc())
+    assert cr.main([good, base]) == 0
+    # identity is exact: a row divergence fails even when it improves
+    assert cr.main([write("row.json", doc(opt=301.0)), base]) == 1
+    # the kill must have been delivered by signal
+    assert cr.main([write("rc.json", doc(kill_rc=0)), base]) == 1
+    # a drill where nothing resumed proves nothing
+    assert cr.main([write("nores.json", doc(resumed_rounds=0)), base]) == 1
+    # fault machinery must show activity...
+    assert cr.main([write("noretry.json", doc(retried=0)), base]) == 1
+    assert cr.main([write("norebuild.json", doc(rebuilds=0)), base]) == 1
+    assert cr.main([write("noquar.json", doc(store_quar=0)), base]) == 1
+    vac = dict.fromkeys(("worker_crash", "worker_hang", "torn_write"), 0)
+    assert cr.main([write("noinj.json", doc(injected=vac)), base]) == 1
+    # ...but never escalate to frontier-moving verdicts
+    assert cr.main([write("poison.json", doc(pool_quar=1)), base]) == 1
+    assert cr.main([write("mc.json", doc(merge_conflicts=1)), base]) == 1
+
+
+def test_check_regression_store_gate(tmp_path):
+    """check_store on a healthy (non-chaos) converged --store run: write
+    conflicts always fail; quarantined entries fail without chaos."""
+    import json
+    cr = _load_bench("check_regression")
+
+    def doc(*, conflicts=0, quarantined=0, converge=True):
+        d = {
+            "suite": "fmax_suite", "converge": converge, "subset": ["d"],
+            "rows": [{"name": "d", "board": "u280", "opt_mhz": 300.0}],
+            "summary": {"opt_avg_mhz": 300.0, "sim_deadlocks": 0,
+                        "throughput_violations": 0},
+            "sim": {
+                "counts": {"event": 0, "cycle": 0, "numpy": 3, "jax": 0,
+                           "fallback": 0},
+                "points_evaluated": 18,
+                "floorplan": {"solved": 9, "cache_hits": 12,
+                              "merge_conflicts": 0, "ilp_bipartitions": 20},
+                "analysis": {"analyzed": 7, "doomed": 0, "skipped": 0,
+                             "infeasible": 0},
+                "store": {"writes": 9, "disk_hits": 0, "disk_misses": 18,
+                          "quarantined": quarantined, "evictions": 0,
+                          "conflicts": conflicts, "entries": 9},
+            },
+        }
+        return d
+
+    def write(name, d):
+        p = tmp_path / name
+        p.write_text(json.dumps(d))
+        return str(p)
+
+    # the converged run gates against the NON-converged fmax baseline
+    base = write("base.json", doc(converge=False))
+    assert cr.main([write("ok.json", doc()), base]) == 0
+    assert cr.main([write("conf.json", doc(conflicts=1)), base]) == 1
+    assert cr.main([write("quar.json", doc(quarantined=2)), base]) == 1
