@@ -64,6 +64,12 @@ regress beyond tolerance:
   per-design frontier size must match the baseline exactly: skipping is
   only sound when it provably cannot move the frontier.
 
+* corpus suite (``corpus_suite.py --json``): every generated clean-family
+  design lints clean, the differential oracle table ran every stage with
+  zero mismatches, zero silent backend fallbacks, every baseline search
+  bucket's frontier hypervolume within ``--tol``, and the HBM
+  channel-binding axis exercised by at least one bucket.
+
 Usage:
     python benchmarks/check_regression.py CURRENT.json BASELINE.json [--tol 0.02]
 """
@@ -513,6 +519,66 @@ def check_throughput(cur: dict, base: dict, tol: float) -> list[str]:
     return errors
 
 
+def check_corpus(cur: dict, base: dict, tol: float) -> list[str]:
+    """The generated-corpus gate (``benchmarks/corpus_suite.py``):
+
+    * every clean-family design lints clean (zero structure errors);
+    * the differential harness found no oracle mismatch, actually covered
+      every stage (verdicts, backend equivalence, both autobridge paths,
+      parallel-search identity), and the corpus is at least as large as
+      the baseline's;
+    * zero silent backend fallbacks across the whole suite;
+    * every baseline search bucket is still present with frontier
+      hypervolume within ``--tol`` of the committed value (search power
+      on generated topologies must not regress);
+    * the HBM channel-binding axis was exercised by at least one bucket.
+    """
+    errors = []
+    lint = cur.get("lint", {})
+    if not lint.get("checked"):
+        errors.append("corpus suite recorded no linted designs")
+    if lint.get("errors"):
+        errors.append(
+            f"{lint['errors']} corpus design(s) failed structure lint "
+            f"(codes: {', '.join(lint.get('codes', []) or ['?'])})")
+    diff = cur.get("differential", {})
+    if not diff.get("ok", False):
+        for m in diff.get("mismatches", [])[:10]:
+            errors.append(f"differential mismatch: {m}")
+        if not diff.get("mismatches"):
+            errors.append("differential harness did not report ok")
+    base_diff = base.get("differential", {})
+    if diff.get("designs", 0) < base_diff.get("designs", 0):
+        errors.append(
+            f"corpus shrank: {diff.get('designs', 0)} designs vs baseline "
+            f"{base_diff.get('designs', 0)}")
+    for counter in ("verdicts_checked", "sims_checked", "feasible",
+                    "infeasible", "searches_checked"):
+        if not diff.get(counter):
+            errors.append(
+                f"differential stage never ran: {counter} == 0")
+    if cur.get("engine", {}).get("fallback", 0):
+        errors.append(
+            f"corpus suite recorded {cur['engine']['fallback']} silent "
+            f"backend fallback(s) (expected 0)")
+    cur_buckets = {b["design"]: b for b in cur.get("buckets", [])}
+    for b in base.get("buckets", []):
+        got = cur_buckets.get(b["design"])
+        if got is None:
+            errors.append(f"search bucket {b['design']} missing")
+            continue
+        floor = b["hypervolume"] * (1.0 - tol)
+        if got["hypervolume"] < floor:
+            errors.append(
+                f"{b['design']}: frontier hypervolume regressed "
+                f"{b['hypervolume']:.4g} -> {got['hypervolume']:.4g} "
+                f"(tol {tol:.0%})")
+    if not any(b.get("hbm_axis") for b in cur.get("buckets", [])):
+        errors.append(
+            "no search bucket exercised the HBM channel-binding axis")
+    return errors
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="freshly produced BENCH_*.json")
@@ -535,6 +601,8 @@ def main(argv: list[str] | None = None) -> int:
         errors = check_fmax(cur, base, args.tol)
     elif cur.get("suite") == "throughput":
         errors = check_throughput(cur, base, args.tol)
+    elif cur.get("suite") == "corpus":
+        errors = check_corpus(cur, base, args.tol)
     else:
         print(f"unknown suite {cur.get('suite')!r}")
         return 2

@@ -1,0 +1,148 @@
+"""Corpus frontier-quality benchmark: generated designs through the
+differential harness plus per-family search-power buckets.
+
+Three phases, one ``BENCH_corpus.json``:
+
+1. **lint** — every clean-family design through ``repro.analysis``'s
+   structure pass; the CI gate requires zero error diagnostics.
+2. **differential** — the full oracle table (``repro.corpus.differential``)
+   over the clean corpus *plus* a fuzz batch (broken graphs: zero-capacity
+   FIFOs, data-cycle deadlocks) at the same seeds CI pins.
+3. **buckets** — per family, the first ``--search-per-family`` designs get
+   a small joint design-space search; the bucket rows record frontier size
+   and exact hypervolume w.r.t. the fixed ``HV_REF`` reference, which
+   ``check_corpus`` compares against the committed baseline.  The ``hbm``
+   family searches over ``hbm_splits`` (channel-binding axis), so corpus
+   designs with HBM channel demands exercise channel-binding floorplans.
+
+Usage:
+    python benchmarks/corpus_suite.py [--designs 200] [--fuzz 40]
+        [--seed 0] [--search-per-family 2] [--jobs 2] [--json OUT.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.analysis import analysis_counts, analyze, reset_analysis_counts
+from repro.core import engine_counts, reset_engine_counts
+from repro.corpus import CLEAN_FAMILIES, run_differential, sample_corpus
+from repro.fpga import u280_grid
+from repro.search.engine import explore_design_space
+from repro.search.pareto import hypervolume, objective_vector
+from repro.search.space import SearchSpace
+
+#: fixed hypervolume reference (fmax floor, area/cycles ceilings) — all
+#: bucket hypervolumes are measured against the same box so runs compare;
+#: the box is sized to the corpus designs' actual ranges (overhead well
+#: under 20k bits, waves well under 2k cycles) so all three axes move it
+HV_REF = (0.0, -20_000.0, -2_000.0)
+#: the channel-binding sweep of the hbm family's buckets
+HBM_SPLITS = (0.25, 0.5, 0.75)
+
+
+def _bucket_space(family: str) -> SearchSpace:
+    base = dict(seeds=(0,), utils=(0.6, 0.75), depth_scales=(1.0, 2.0))
+    if family == "hbm":
+        return SearchSpace(**base, hbm_splits=HBM_SPLITS)
+    return SearchSpace(**base)
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--designs", type=int, default=200,
+                    help="total clean-family designs (split evenly)")
+    ap.add_argument("--fuzz", type=int, default=40,
+                    help="extra fuzz-family designs for the differential")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--search-per-family", type=int, default=2,
+                    help="designs per family given a full search bucket")
+    ap.add_argument("--floorplans", type=int, default=25,
+                    help="differential autobridge budget")
+    ap.add_argument("--jobs", type=int, default=2,
+                    help="worker processes for the parallel-identity check")
+    ap.add_argument("--surrogate", action="store_true", default=True,
+                    help="include the surrogate-vs-uniform check")
+    ap.add_argument("--json", dest="json_path", default=None)
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    grid = u280_grid()
+    per_family = max(1, args.designs // len(CLEAN_FAMILIES))
+    corpus = {fam: sample_corpus(fam, per_family, seed=args.seed)
+              for fam in CLEAN_FAMILIES}
+    fuzz = sample_corpus("fuzz", args.fuzz, seed=args.seed)
+
+    # phase 1: lint gate — clean families must have zero structure errors
+    lint_checked, lint_errors, codes = 0, 0, set()
+    for designs in corpus.values():
+        for d in designs:
+            rep = analyze(d.graph, grid=grid, passes=("structure",))
+            lint_checked += 1
+            if not rep.ok:
+                lint_errors += 1
+                codes.update(rep.codes())
+
+    # phases 2+3 under shared engine/analysis counters
+    reset_engine_counts()
+    reset_analysis_counts()
+    all_designs = [d for ds in corpus.values() for d in ds] + fuzz
+    diff = run_differential(
+        all_designs, grid=grid, floorplan_limit=args.floorplans,
+        search_designs=args.search_per_family, search_jobs=args.jobs,
+        check_surrogate=args.surrogate)
+
+    buckets = []
+    for fam in CLEAN_FAMILIES:
+        space = _bucket_space(fam)
+        for d in corpus[fam][:args.search_per_family]:
+            res = explore_design_space(d.graph, grid, space=space,
+                                       sim_firings=d.firings)
+            vecs = [objective_vector(c) for c in res.frontier]
+            hv = hypervolume(vecs, HV_REF)
+            row = {
+                "family": fam,
+                "design": d.name,
+                "fingerprint": d.fingerprint,
+                "tasks": len(d.graph.tasks),
+                "streams": len(d.graph.streams),
+                "points": res.space_size,
+                "feasible": sum(1 for c in res.candidates
+                                if c.plan is not None),
+                "frontier": len(res.frontier),
+                "hypervolume": hv,
+                "hbm_axis": space.hbm_splits != (0.5,),
+            }
+            buckets.append(row)
+            print(f"corpus,{row['design']},0,hv={hv:.1f} "
+                  f"frontier={row['frontier']} feasible={row['feasible']}"
+                  f"{' hbm_axis' if row['hbm_axis'] else ''}", flush=True)
+
+    out = {
+        "suite": "corpus",
+        "seed": args.seed,
+        "designs": lint_checked,
+        "fuzz_designs": len(fuzz),
+        "families": {fam: len(ds) for fam, ds in corpus.items()},
+        "lint": {"checked": lint_checked, "errors": lint_errors,
+                 "codes": sorted(codes)},
+        "differential": diff.counters(),
+        "buckets": buckets,
+        "engine": engine_counts(),
+        "analysis": analysis_counts(),
+        "hbm_splits": list(HBM_SPLITS),
+        "wall_s": time.perf_counter() - t0,
+    }
+    print(f"corpus,summary,0,designs={lint_checked}+{len(fuzz)}fuzz "
+          f"lint_errors={lint_errors} differential_ok={diff.ok} "
+          f"fallbacks={out['engine'].get('fallback', 0)}", flush=True)
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json_path}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,29 +1,64 @@
-"""Paper §7.4 Tables 8-10: HBM-specific optimizations.
+"""Paper §7.4 Tables 8-10: HBM-specific optimizations, channel-aware.
 
   Table 3 analogue : async_mmap vs mmap resource cost per channel
+                     (the per-channel math uses ``U280_HBM_CHANNELS``
+                     from ``repro.fpga`` — the board owns the constant)
   Tables 8/9       : the 5 HBM designs, mmap+packed vs async+TAPA
-  Table 10         : multi-floorplan generation (util sweep, all points)
+  Table 10         : multi-floorplan generation — the util sweep joined
+                     with the HBM channel-binding axis
+                     (``SearchSpace.hbm_splits``), so each design's
+                     Pareto frontier spans bindings as well as head-room
+
+``--json`` writes a ``BENCH_hbm_opts.json`` row dump (the nightly runs
+it; ``run.py`` keeps consuming the CSV lines).
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 from repro.core import (InfeasibleError, analyze_timing, autobridge,
-                        explore_floorplans, packed_placement)
-from repro.fpga import benchmarks as B, u280_grid
+                        packed_placement)
+from repro.fpga import U280_HBM_CHANNELS, benchmarks as B, u280_grid
 from repro.fpga.benchmarks import ASYNC_IO, MMAP_IO
+from repro.search.engine import explore_design_space
+from repro.search.pareto import hypervolume, objective_vector
+from repro.search.space import SearchSpace
+
+#: the channel-binding sweep of the Table 10 frontier (0.5 = the
+#: platform's symmetric default binding)
+HBM_SPLITS = (0.25, 0.5, 0.75)
+UTILS = (0.6, 0.65, 0.7, 0.75, 0.8, 0.85)
+#: fixed hypervolume reference, same convention as ``corpus_suite``
+HV_REF = (0.0, -200_000.0, -10_000.0)
 
 
-def main():
+def _builders():
+    return {"sasa_v1": lambda a: B.sasa(1, a),
+            "sasa_v2": lambda a: B.sasa(2, a),
+            "spmm": B.spmm,
+            "spmv_a16": lambda a: B.spmv(20, a),
+            "spmv_a24": lambda a: B.spmv(28, a)}
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", dest="json_path", default=None)
+    args = ap.parse_args(argv)
+    rows: list[dict] = []
+
+    bram_saved = U280_HBM_CHANNELS * MMAP_IO["BRAM"]
     print(f"hbm_opts,table3,0,mmap=LUT{MMAP_IO['LUT']:.0f}/"
           f"FF{MMAP_IO['FF']:.0f}/BRAM{MMAP_IO['BRAM']:.0f} "
           f"async=LUT{ASYNC_IO['LUT']:.0f}/FF{ASYNC_IO['FF']:.0f}/"
           f"BRAM{ASYNC_IO['BRAM']:.0f} "
-          f"bram_saved_32ch={32*MMAP_IO['BRAM']:.0f}")
+          f"bram_saved_{U280_HBM_CHANNELS}ch={bram_saved:.0f}")
+    rows.append({"table": "table3", "name": "per_channel_io",
+                 "mmap": dict(MMAP_IO), "async": dict(ASYNC_IO),
+                 "channels": U280_HBM_CHANNELS,
+                 "bram_saved": bram_saved})
 
-    builders = {"sasa_v1": lambda a: B.sasa(1, a),
-                "sasa_v2": lambda a: B.sasa(2, a),
-                "spmm": B.spmm,
-                "spmv_a16": lambda a: B.spmv(20, a),
-                "spmv_a24": lambda a: B.spmv(28, a)}
+    builders = _builders()
     grid = u280_grid()
     for name, make in builders.items():
         g_mmap = make(False)
@@ -33,27 +68,60 @@ def main():
             plan = autobridge(g_async, grid, max_util=0.8)
             opt = analyze_timing(g_async, grid, plan.floorplan.placement,
                                  plan.depth)
+            opt_mhz = opt.fmax_mhz if opt.routed else None
             o = (f"{opt.fmax_mhz:.0f}/{opt.hbm_clk_mhz:.0f}MHz"
                  if opt.routed else "FAIL")
         except InfeasibleError:
-            o = "INFEAS"
+            opt_mhz, o = None, "INFEAS"
+
         def bram(g):
             return g.total_area().get("BRAM", 0)
+
         bb = f"{base.fmax_mhz:.0f}/{base.hbm_clk_mhz:.0f}MHz" \
             if base.routed else "FAIL"
         print(f"hbm_opts,{name},0,orig={bb} opt={o} "
               f"bram={bram(g_mmap):.0f}->{bram(g_async):.0f}")
+        rows.append({"table": "table8_9", "name": name,
+                     "base_mhz": round(base.fmax_mhz, 1)
+                     if base.routed else None,
+                     "opt_mhz": round(opt_mhz, 1) if opt_mhz else None,
+                     "bram_mmap": bram(g_mmap),
+                     "bram_async": bram(g_async)})
 
-    # Table 10: the multi-floorplan Pareto sweep
+    # Table 10: the multi-floorplan Pareto sweep, now joint with the HBM
+    # channel-binding axis — each point is (util, hbm_split), and the
+    # floorplan cache keys bindings apart automatically (slot_caps are
+    # part of the grid signature)
+    space = SearchSpace(seeds=(0,), utils=UTILS, hbm_splits=HBM_SPLITS)
     for name in ("sasa_v1", "spmm", "spmv_a24"):
         g = builders[name](True)
-        cands = explore_floorplans(g, u280_grid(),
-                                   utils=(0.6, 0.65, 0.7, 0.75, 0.8, 0.85))
-        pts = "/".join(f"{c.fmax:.0f}" if c.plan and c.report.routed
-                       else "Failed" for c in cands)
-        ok = [c.fmax for c in cands if c.plan and c.report.routed]
-        print(f"hbm_opts,multifloorplan_{name},0,points={pts}MHz "
-              f"max={max(ok) if ok else 0:.0f} min={min(ok) if ok else 0:.0f}")
+        res = explore_design_space(g, u280_grid(), space=space,
+                                   sim_firings=100)
+        ok = [c for c in res.candidates if c.plan is not None]
+        vecs = [objective_vector(c) for c in res.frontier]
+        hv = hypervolume(vecs, HV_REF)
+        fmaxes = [c.report.fmax_mhz for c in ok if c.report.routed]
+        splits = sorted({c.point.hbm_split for c in res.frontier})
+        print(f"hbm_opts,multifloorplan_{name},0,"
+              f"points={len(res.candidates)} feasible={len(ok)} "
+              f"frontier={len(res.frontier)} "
+              f"max={max(fmaxes) if fmaxes else 0:.0f}MHz "
+              f"min={min(fmaxes) if fmaxes else 0:.0f}MHz "
+              f"hv={hv:.3g} frontier_splits={splits}")
+        rows.append({"table": "table10", "name": name,
+                     "points": len(res.candidates), "feasible": len(ok),
+                     "frontier": len(res.frontier),
+                     "hypervolume": hv,
+                     "max_mhz": round(max(fmaxes), 1) if fmaxes else None,
+                     "frontier_splits": splits,
+                     "hbm_splits": list(HBM_SPLITS)})
+
+    out = {"suite": "hbm_opts", "rows": rows}
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json_path}", flush=True)
+    return out
 
 
 if __name__ == "__main__":

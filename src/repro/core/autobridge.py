@@ -259,6 +259,7 @@ def initial_floorplan_key(graph: TaskGraph, grid: SlotGrid, *,
                           row_weight: float = 1.0,
                           col_weight: float = 1.0,
                           depth_scale: float = 1.0,
+                          hbm_split: float = 0.5,
                           **_ignored) -> tuple:
     """The ``FloorplanCache`` key of ``autobridge``'s FIRST floorplan solve
     under these knobs (cycle-feedback rounds may add further keys, but a
@@ -266,8 +267,9 @@ def initial_floorplan_key(graph: TaskGraph, grid: SlotGrid, *,
     dispatching points whose solve chain a previous run already cached.
     Defaults mirror ``autobridge``'s; unrelated kwargs are ignored so the
     explorer can forward its ``ab_kwargs`` verbatim."""
-    grid = grid.with_knobs(row_weight=row_weight, col_weight=col_weight,
-                           depth_scale=depth_scale)
+    grid = grid.with_hbm_binding(hbm_split).with_knobs(
+        row_weight=row_weight, col_weight=col_weight,
+        depth_scale=depth_scale)
     util = grid.max_util if max_util is None else max_util
     return FloorplanCache.key(graph, grid, max_util=util,
                               same_slot=[set(g) for g in same_slot],
@@ -337,13 +339,18 @@ def autobridge(graph: TaskGraph, grid: SlotGrid, *,
                row_weight: float = 1.0,
                col_weight: float = 1.0,
                depth_scale: float = 1.0,
+               hbm_split: float = 0.5,
                cache: FloorplanCache | None = None,
                check: bool = False) -> Plan:
     # co-optimization knobs beyond max-util (joint design-space search,
     # §6.3 generalized): realized as a scaled working grid, so the whole
     # floorplan->pipeline->balance chain sees consistent weights/depths.
-    grid = grid.with_knobs(row_weight=row_weight, col_weight=col_weight,
-                           depth_scale=depth_scale)
+    # hbm_split re-binds the device's HBM channels across the channel
+    # slots (SlotGrid.with_hbm_binding) — a different binding is a
+    # different grid signature, so the cache keys variants apart.
+    grid = grid.with_hbm_binding(hbm_split).with_knobs(
+        row_weight=row_weight, col_weight=col_weight,
+        depth_scale=depth_scale)
     util = grid.max_util if max_util is None else max_util
 
     if check:

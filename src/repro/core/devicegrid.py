@@ -100,6 +100,50 @@ class SlotGrid:
             row_boundaries=scaled(self.row_boundaries, row_weight),
             col_boundaries=scaled(self.col_boundaries, col_weight))
 
+    def hbm_slots(self) -> list[tuple[int, int]]:
+        """Slots that expose ``hbm_channels`` capacity, in slot order."""
+        return [s for s in self.slots()
+                if self.slot_caps.get(s, {}).get("hbm_channels", 0) > 0]
+
+    def total_hbm_channels(self) -> float:
+        """Total HBM channels across the grid (0 for DDR-only devices)."""
+        return sum(self.slot_caps.get(s, {}).get("hbm_channels", 0.0)
+                   for s in self.slots())
+
+    def with_hbm_binding(self, split: float) -> "SlotGrid":
+        """A copy with the device's HBM channels re-bound across the
+        channel-bearing slots (the search axis behind
+        ``SearchSpace.hbm_splits``).
+
+        Physically the channel *stacks* are fixed, but the platform's
+        channel-to-slot binding — which pseudo-channels the shell routes
+        into which slot's crossbar — is a build-time choice.  ``split``
+        tilts the per-slot channel shares linearly across the channel
+        slots (in slot order): the first share is proportional to
+        ``split``, the last to ``1 - split``, with the total channel count
+        conserved.  ``split = 0.5`` is the symmetric default binding and
+        returns the grid unchanged; designs whose IO tasks crowd one side
+        of the die use other splits to buy feasibility (TAPA §6.2's
+        channels-as-a-slot-resource model made searchable).
+
+        Grids without HBM slots (or with a single one) are returned
+        unchanged for any split."""
+        if not 0.0 <= split <= 1.0:
+            raise ValueError(f"hbm split must be in [0, 1], got {split!r}")
+        slots = self.hbm_slots()
+        if len(slots) < 2 or split == 0.5:
+            return self
+        total = self.total_hbm_channels()
+        k = len(slots)
+        raw = [split + (1.0 - 2.0 * split) * i / (k - 1) for i in range(k)]
+        norm = sum(raw)
+        caps = {s: dict(c) for s, c in self.slot_caps.items()}
+        for s, w in zip(slots, raw):
+            caps[s]["hbm_channels"] = total * w / norm
+        if caps == self.slot_caps:
+            return self
+        return dataclasses.replace(self, slot_caps=caps)
+
     # -- distances ---------------------------------------------------------
     def crossing_weight(self, a: tuple[int, int], b: tuple[int, int]) -> float:
         """Weighted Manhattan distance: sum of boundary weights crossed.

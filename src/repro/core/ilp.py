@@ -221,7 +221,9 @@ def _greedy_initial(p: BipartitionProblem, loads: _Loads,
                 frac = np.where(np.isfinite(cap) & (cap > 0),
                                 (cap - loads.load[g, side]) / np.maximum(cap, 1e-9),
                                 1.0)
-            room.append(float(frac.min()))
+            # a zero-resource problem (every area vector empty) has no
+            # head-room axis at all: both sides are equally fine
+            room.append(float(frac.min()) if frac.size else 1.0)
         first = int(room[1] > room[0] + 1e-12)
         if room[0] == room[1]:
             first = int(rng.integers(0, 2))

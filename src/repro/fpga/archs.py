@@ -47,7 +47,17 @@ def u250_grid(max_util: float = 0.70, ddr_channels_per_row: int = 1) -> SlotGrid
                     max_util=max_util)
 
 
-def u280_grid(max_util: float = 0.70) -> SlotGrid:
+#: total HBM pseudo-channels on the U280's bottom edge (paper §2.3/§6.2);
+#: promoted from the ad-hoc constant in ``benchmarks/hbm_opts.py`` so the
+#: channel-math (e.g. BRAM saved by async channel IO = channels x per-port
+#: buffer) lives next to the grid that owns the channels.
+U280_HBM_CHANNELS = 32
+
+
+def u280_grid(max_util: float = 0.70, hbm_split: float = 0.5) -> SlotGrid:
+    """The U280 grid; ``hbm_split`` tilts the 32-channel HBM binding
+    across the two bottom slots (``SlotGrid.with_hbm_binding``) — 0.5 is
+    the symmetric platform default of 16 channels per slot."""
     rows, cols = 3, 2
     cap = {
         "LUT": 1303e3 / (rows * cols),
@@ -58,15 +68,17 @@ def u280_grid(max_util: float = 0.70) -> SlotGrid:
     }
     # 32 HBM channels across the bottom row (16 per bottom slot);
     # 2 DDR DIMMs near the top die
-    slot_caps = {(0, 0): {"hbm_channels": 16.0},
-                 (0, 1): {"hbm_channels": 16.0},
+    hbm_per_slot = U280_HBM_CHANNELS / 2
+    slot_caps = {(0, 0): {"hbm_channels": hbm_per_slot},
+                 (0, 1): {"hbm_channels": hbm_per_slot},
                  (2, 0): {"ddr_channels": 4.0},
                  (2, 1): {"ddr_channels": 4.0}}
-    return SlotGrid("U280", rows=rows, cols=cols, base_capacity=cap,
+    grid = SlotGrid("U280", rows=rows, cols=cols, base_capacity=cap,
                     slot_caps=slot_caps,
                     row_boundaries=[_DIE() for _ in range(rows - 1)],
                     col_boundaries=[_IOCOL() for _ in range(cols - 1)],
                     max_util=max_util)
+    return grid.with_hbm_binding(hbm_split)
 
 
 def _ICI() -> Boundary:
@@ -111,6 +123,13 @@ def tpu_pod_grid(rows: int = 4, cols: int = 2,
 DEVICE_GRIDS = {
     "u250": u250_grid,
     "u280": u280_grid,
+    #: channel-aware U280 variants: the HBM binding tilted toward the
+    #: left/right bottom slot (SearchSpace(hbm_splits=...) searches the
+    #: same axis continuously; these are the named extreme points)
+    "u280_hbm_left": lambda max_util=0.70: u280_grid(
+        max_util=max_util, hbm_split=0.75),
+    "u280_hbm_right": lambda max_util=0.70: u280_grid(
+        max_util=max_util, hbm_split=0.25),
     "tpu_pod_4x2": tpu_pod_grid,
     "tpu_pod_2x2": lambda max_util=0.70: tpu_pod_grid(
         rows=2, cols=2, max_util=max_util),

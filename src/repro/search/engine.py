@@ -201,8 +201,9 @@ def _derive_depth_variant(graph: TaskGraph, grid: SlotGrid, base: Plan,
     scale.  The floorplan is depth-invariant, so this skips the ILP; a
     (theoretically unreachable) balance cycle falls back to a full
     autobridge run with the point's knobs."""
-    sgrid = grid.with_knobs(row_weight=pt.row_weight, col_weight=pt.col_weight,
-                            depth_scale=pt.depth_scale)
+    sgrid = grid.with_hbm_binding(pt.hbm_split).with_knobs(
+        row_weight=pt.row_weight, col_weight=pt.col_weight,
+        depth_scale=pt.depth_scale)
     fp = dataclasses.replace(base.floorplan, grid=sgrid)
     pa = assign_pipelining(graph, fp)
     try:
@@ -212,7 +213,8 @@ def _derive_depth_variant(graph: TaskGraph, grid: SlotGrid, base: Plan,
             return autobridge(graph, grid, max_util=pt.max_util, seed=pt.seed,
                               row_weight=pt.row_weight,
                               col_weight=pt.col_weight,
-                              depth_scale=pt.depth_scale, **ab_kwargs)
+                              depth_scale=pt.depth_scale,
+                              hbm_split=pt.hbm_split, **ab_kwargs)
         except InfeasibleError as err:
             return err
     depth = {name: pa.lat[name] + bal.balance[name] for name in pa.lat}
@@ -568,7 +570,8 @@ def prepare_design_space(graph: TaskGraph, grid: SlotGrid, *,
     def _run_autobridge(g: TaskGraph, pt: SearchPoint):
         return autobridge(g, grid, max_util=pt.max_util, seed=pt.seed,
                           row_weight=pt.row_weight, col_weight=pt.col_weight,
-                          depth_scale=pt.depth_scale, **ab_kwargs)
+                          depth_scale=pt.depth_scale,
+                          hbm_split=pt.hbm_split, **ab_kwargs)
 
     for pt in points:
         entry = plans.get(pt.floorplan_key)

@@ -148,7 +148,7 @@ def _point_kwargs(pt: SearchPoint) -> dict:
     """The ``autobridge`` knob kwargs of one search point."""
     return {"max_util": pt.max_util, "seed": pt.seed,
             "row_weight": pt.row_weight, "col_weight": pt.col_weight,
-            "depth_scale": pt.depth_scale}
+            "depth_scale": pt.depth_scale, "hbm_split": pt.hbm_split}
 
 
 def _point_token(pt_kwargs: dict) -> str:

@@ -30,12 +30,17 @@ class SearchPoint:
     row_weight: float = 1.0
     col_weight: float = 1.0
     depth_scale: float = 1.0
+    #: HBM channel-to-slot binding tilt (``SlotGrid.with_hbm_binding``);
+    #: 0.5 = the device's symmetric default binding.  Only meaningful on
+    #: grids with HBM slots — everywhere else any value is a no-op.
+    hbm_split: float = 0.5
 
     @property
     def floorplan_key(self) -> tuple:
         """Axes the floorplan depends on.  ``depth_scale`` only affects
         pipelining/balancing, so depth variants share one floorplan."""
-        return (self.seed, self.max_util, self.row_weight, self.col_weight)
+        return (self.seed, self.max_util, self.row_weight, self.col_weight,
+                self.hbm_split)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,10 +117,15 @@ class SearchSpace:
     row_weights: tuple[float, ...] | Interval = (1.0,)
     col_weights: tuple[float, ...] | Interval = (1.0,)
     depth_scales: tuple[float, ...] | Interval = (1.0,)
+    #: HBM channel-binding tilt axis (``SlotGrid.with_hbm_binding``); the
+    #: single default value keeps the device's symmetric binding and adds
+    #: nothing to the product — sweep e.g. ``(0.25, 0.5, 0.75)`` (or an
+    #: ``Interval``) on HBM boards to make channel binding a search axis.
+    hbm_splits: tuple[float, ...] | Interval = (0.5,)
 
     def _axes(self) -> tuple:
         return (self.seeds, self.utils, self.row_weights, self.col_weights,
-                self.depth_scales)
+                self.depth_scales, self.hbm_splits)
 
     @property
     def continuous(self) -> bool:
@@ -128,19 +138,20 @@ class SearchSpace:
         if self.continuous:
             return math.inf
         return (len(self.seeds) * len(self.utils) * len(self.row_weights)
-                * len(self.col_weights) * len(self.depth_scales))
+                * len(self.col_weights) * len(self.depth_scales)
+                * len(self.hbm_splits))
 
     def _decode(self, idx: int) -> SearchPoint:
-        """Mixed-radix decode of a flat product index (depth_scale fastest,
+        """Mixed-radix decode of a flat product index (hbm_split fastest,
         seed slowest — matches ``itertools.product`` order)."""
         axes = self._axes()
         vals = []
         for ax in reversed(axes):
             idx, r = divmod(idx, len(ax))
             vals.append(ax[r])
-        d, c, w, u, s = vals
+        h, d, c, w, u, s = vals
         return SearchPoint(seed=s, max_util=u, row_weight=w, col_weight=c,
-                           depth_scale=d)
+                           depth_scale=d, hbm_split=h)
 
     def grid_points(self) -> list[SearchPoint]:
         if self.continuous:
@@ -148,10 +159,10 @@ class SearchSpace:
                 "grid enumeration needs discrete axes; this space has "
                 "Interval axes — use sample()/refine() (random mode)")
         return [SearchPoint(seed=s, max_util=u, row_weight=rw, col_weight=cw,
-                            depth_scale=d)
-                for s, u, rw, cw, d in itertools.product(
+                            depth_scale=d, hbm_split=h)
+                for s, u, rw, cw, d, h in itertools.product(
                     self.seeds, self.utils, self.row_weights,
-                    self.col_weights, self.depth_scales)]
+                    self.col_weights, self.depth_scales, self.hbm_splits)]
 
     def sample(self, n: int, *, seed: int = 0) -> list[SearchPoint]:
         """``n`` distinct points drawn uniformly from the space (the whole
@@ -167,6 +178,12 @@ class SearchSpace:
             rng = random.Random(seed)
             return [self._decode(i) for i in rng.sample(range(self.size), n)]
         rng = random.Random(seed)
+        # the default single-valued hbm axis must not consume randomness:
+        # samples from spaces that don't sweep the binding stay bit-identical
+        # to the pre-hbm-axis draws (the converged-search trajectories and
+        # the uniform-vs-surrogate anchors depend on that stream)
+        hbm_degenerate = (not _is_interval(self.hbm_splits)
+                          and len(self.hbm_splits) == 1)
         pts: list[SearchPoint] = []
         seen: set[SearchPoint] = set()
         for _ in range(20 * n + 100):
@@ -176,7 +193,10 @@ class SearchSpace:
                              max_util=_draw_axis(self.utils, rng),
                              row_weight=_draw_axis(self.row_weights, rng),
                              col_weight=_draw_axis(self.col_weights, rng),
-                             depth_scale=_draw_axis(self.depth_scales, rng))
+                             depth_scale=_draw_axis(self.depth_scales, rng),
+                             hbm_split=(self.hbm_splits[0] if hbm_degenerate
+                                        else _draw_axis(self.hbm_splits,
+                                                        rng)))
             if pt not in seen:
                 seen.add(pt)
                 pts.append(pt)
@@ -220,7 +240,8 @@ class SearchSpace:
             row_weights=hood(self.row_weights, {p.row_weight for p in pts}),
             col_weights=hood(self.col_weights, {p.col_weight for p in pts}),
             depth_scales=hood(self.depth_scales,
-                              {p.depth_scale for p in pts}))
+                              {p.depth_scale for p in pts}),
+            hbm_splits=hood(self.hbm_splits, {p.hbm_split for p in pts}))
 
     def refine(self, frontier: Sequence, n: int, *,
                seed: int = 0) -> list[SearchPoint]:

@@ -27,6 +27,7 @@ from repro.core import (InfeasibleError, TaskGraphBuilder, simulate,
 from repro.core.autobridge import (FloorplanCache, autobridge,
                                    initial_floorplan_key)
 from repro.core.graph import Stream, Task, TaskGraph
+from repro.corpus import random_graph
 from repro.fpga import benchmarks as B, grid_for
 from repro.search.engine import explore_design_space
 from repro.search.pool import warm_floorplan_cache
@@ -59,42 +60,10 @@ def _cycle(control_back=False):
 
 
 def _random_graph(rng: random.Random) -> TaskGraph:
-    """Layered graph with random fanin, zero-depth FIFOs, control streams,
-    detached sinks, skip edges, and an occasional feedback cycle — the
-    event-engine equivalence tests' generator, cycles always allowed."""
-    g = TaskGraph("rand")
-    layers = []
-    nid = 0
-    for li in range(rng.randint(2, 4)):
-        layer = []
-        for _ in range(rng.randint(1, 3)):
-            name = f"t{nid}"
-            nid += 1
-            g.add_task(Task(name=name,
-                            detached=(li > 0 and rng.random() < 0.1)))
-            layer.append(name)
-        layers.append(layer)
-    sid = 0
-    for li in range(1, len(layers)):
-        for dst in layers[li]:
-            for src in rng.sample(layers[li - 1],
-                                  rng.randint(1, len(layers[li - 1]))):
-                g.add_stream(Stream(name=f"e{sid}", src=src, dst=dst,
-                                    depth=rng.randint(0, 3),
-                                    control=(rng.random() < 0.1)),
-                             validate=False)       # depth may be 0
-                sid += 1
-    if len(layers) >= 3 and rng.random() < 0.7:   # reconvergent skip edge
-        g.add_stream(Stream(name=f"e{sid}", src=layers[0][0],
-                            dst=layers[-1][0], depth=rng.randint(0, 3)),
-                     validate=False)
-        sid += 1
-    if rng.random() < 0.5:                        # feedback edge
-        g.add_stream(Stream(name=f"e{sid}", src=layers[-1][0],
-                            dst=layers[0][0], depth=rng.randint(0, 2),
-                            control=(rng.random() < 0.2)),
-                     validate=False)
-    return g
+    """Fuzz-family corpus graph, cycles always allowed: layered graph with
+    random fanin, zero-depth FIFOs, control streams, detached sinks, skip
+    edges, and an occasional (possibly control-closed) feedback cycle."""
+    return random_graph(rng, allow_cycle=True)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,331 @@
+"""Corpus generator + differential harness tests (``repro.corpus``).
+
+Covers: deterministic generation and content fingerprints, family knob
+coverage (broken fuzz graphs, lint-clean benchmark families, SDF rate
+annotations, HBM channel demands), the ``random_graph`` test shim's
+coverage classes (cycles, detached tasks, zero-capacity FIFOs), the
+differential harness end to end, the HBM channel-binding axis through
+``SlotGrid`` / ``SearchSpace`` / ``autobridge``, and the ``check_corpus``
+CI gate's failure modes on synthetic JSONs.
+"""
+import copy
+import dataclasses
+import importlib.util
+import os
+import random
+
+import pytest
+
+from repro.analysis import analyze
+from repro.core import simulate
+from repro.core.autobridge import autobridge
+from repro.corpus import (CLEAN_FAMILIES, FAMILIES, CorpusSpec,
+                          DifferentialReport, generate_design,
+                          generate_graph, graph_fingerprint, random_graph,
+                          run_differential, sample_corpus)
+from repro.fpga import U280_HBM_CHANNELS, grid_for, u280_grid
+from repro.search.space import Interval, SearchPoint, SearchSpace
+
+
+def _load_bench(name):
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "benchmarks", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# generator determinism + fingerprints
+# ---------------------------------------------------------------------------
+
+def test_generation_is_deterministic_per_family_and_seed():
+    for fam in FAMILIES:
+        a = generate_design(11, FAMILIES[fam])
+        b = generate_design(11, FAMILIES[fam])
+        assert a.fingerprint == b.fingerprint
+        assert (a.latency, a.extra_capacity, a.ii, a.firings) == \
+            (b.latency, b.extra_capacity, b.ii, b.firings)
+        assert a.name == f"{fam}-00011"
+
+
+def test_fingerprints_distinguish_seeds_families_and_content():
+    fps = {generate_design(s, FAMILIES[f]).fingerprint
+           for s in range(10) for f in FAMILIES}
+    assert len(fps) == 10 * len(FAMILIES)   # no collisions across the set
+    d = generate_design(0, FAMILIES["dag"])
+    mutated = copy.deepcopy(d.graph)
+    mutated.streams[0].width += 1.0
+    assert graph_fingerprint(mutated) != d.fingerprint
+    # fingerprinting is order-independent for tasks but not streams
+    assert graph_fingerprint(d.graph) == d.fingerprint
+
+
+def test_sample_corpus_is_indexable_by_seed():
+    spec = FAMILIES["wide"]
+    batch = sample_corpus(spec, 6, seed=3)
+    assert [d.seed for d in batch] == [3, 4, 5, 6, 7, 8]
+    assert batch[2].fingerprint == generate_design(5, spec).fingerprint
+    # name-based lookup works too
+    assert sample_corpus("wide", 2)[0].family == "wide"
+
+
+# ---------------------------------------------------------------------------
+# family knob coverage
+# ---------------------------------------------------------------------------
+
+def test_clean_families_lint_clean():
+    """Every clean-family design must be free of structure errors — the
+    CI corpus gate's lint leg."""
+    grid = u280_grid()
+    for fam in CLEAN_FAMILIES:
+        for d in sample_corpus(fam, 12):
+            rep = analyze(d.graph, grid=grid, passes=("structure",))
+            assert rep.ok, (fam, d.seed, [str(x) for x in rep.diagnostics])
+
+
+def test_cyclic_family_cycles_are_control_closed():
+    """The cyclic family generates real feedback edges, but closed through
+    control streams — so no design statically deadlocks."""
+    saw_feedback = False
+    for d in sample_corpus("cyclic", 12):
+        rep = analyze(d.graph, latency=d.latency,
+                      extra_capacity=d.extra_capacity, ii=d.ii,
+                      firings=d.firings)
+        assert rep.deadlock is not True, (d.seed, rep.codes())
+        saw_feedback |= any(s.control for s in d.graph.streams)
+    assert saw_feedback
+
+
+def test_sdf_family_rate_annotations_consistent():
+    saw_rates = False
+    for d in sample_corpus("sdf", 8):
+        for s in d.graph.streams:
+            if "rate_src" in s.meta:
+                saw_rates = True
+                assert s.meta["rate_src"] == s.meta["rate_dst"]
+        rep = analyze(d.graph, passes=("structure", "rates"))
+        assert "R001-rate-inconsistent" not in rep.codes()
+    assert saw_rates
+
+
+def test_hbm_family_demands_channels():
+    total = 0
+    for d in sample_corpus("hbm", 8):
+        io = [t for t in d.graph.tasks.values()
+              if "hbm_channels" in t.area]
+        total += len(io)
+        for t in io:
+            assert t.area["hbm_channels"] >= 1.0
+            assert t.meta.get("hbm_io") is True
+    assert total >= 8 * FAMILIES["hbm"].hbm_io_tasks[0]
+
+
+def test_random_graph_shim_keeps_broken_coverage():
+    """The test-helper shim must keep the coverage classes the simulator
+    and analysis property tests rely on: zero-capacity FIFOs, detached
+    tasks, control streams, and (allow_cycle) dependency cycles."""
+    zero_cap = detached = control = 0
+    deadlocks = 0
+    for seed in range(60):
+        rng = random.Random(seed)
+        g = random_graph(rng, allow_cycle=True)
+        names = {s.name for s in g.streams}
+        assert len(names) == len(g.streams)
+        zero_cap += any(s.depth == 0 for s in g.streams)
+        detached += any(t.detached for t in g.tasks.values())
+        control += any(s.control for s in g.streams)
+        deadlocks += simulate(g, engine="event", firings=5,
+                              max_cycles=100_000).deadlocked
+    assert zero_cap > 10 and detached > 5 and control > 10
+    assert deadlocks > 5            # cycles/zero-caps really deadlock
+    # allow_cycle=False still builds valid graphs (no feedback edges)
+    g = random_graph(random.Random(0))
+    assert g.tasks
+
+
+# ---------------------------------------------------------------------------
+# differential harness
+# ---------------------------------------------------------------------------
+
+def test_differential_full_table_on_mixed_corpus():
+    designs = []
+    for fam in ("dag", "hbm"):
+        designs += sample_corpus(fam, 4)
+    designs += sample_corpus("fuzz", 8)
+    rep = run_differential(designs, floorplan_limit=8, search_designs=1)
+    assert rep.ok, rep.mismatches
+    assert rep.verdicts_checked == len(designs)
+    assert rep.sims_checked == len(designs)
+    assert rep.feasible > 0
+    assert rep.searches_checked == 1
+    assert rep.families == {"dag": 4, "hbm": 4, "fuzz": 8}
+
+
+def test_differential_report_flags_mismatches():
+    rep = DifferentialReport()
+    assert rep.ok
+    d = generate_design(0, FAMILIES["dag"])
+    rep._flag(d, "sim", "numpy 10 vs event 11")
+    assert not rep.ok
+    assert d.fingerprint in rep.mismatches[0]
+    assert rep.counters()["ok"] is False
+
+
+# ---------------------------------------------------------------------------
+# HBM channel-binding axis
+# ---------------------------------------------------------------------------
+
+def test_with_hbm_binding_identity_and_conservation():
+    g = u280_grid()
+    assert g.with_hbm_binding(0.5) is g                 # symmetric default
+    assert g.total_hbm_channels() == U280_HBM_CHANNELS
+    assert g.hbm_slots() == [(0, 0), (0, 1)]
+    tilted = g.with_hbm_binding(0.75)
+    assert tilted is not g
+    assert tilted.total_hbm_channels() == pytest.approx(U280_HBM_CHANNELS)
+    assert tilted.slot_caps[(0, 0)]["hbm_channels"] > \
+        tilted.slot_caps[(0, 1)]["hbm_channels"]
+    # non-HBM capacities and the DDR slots are untouched
+    assert tilted.slot_caps[(2, 0)] == g.slot_caps[(2, 0)]
+    with pytest.raises(ValueError):
+        g.with_hbm_binding(1.5)
+    # grids without (enough) HBM slots are returned unchanged
+    from repro.fpga import u250_grid
+    g250 = u250_grid()
+    assert g250.with_hbm_binding(0.1) is g250
+
+
+def test_channel_aware_named_grids():
+    left = grid_for("u280_hbm_left")
+    right = grid_for("u280_hbm_right")
+    assert left.slot_caps[(0, 0)]["hbm_channels"] == \
+        right.slot_caps[(0, 1)]["hbm_channels"]
+    assert left.total_hbm_channels() == pytest.approx(U280_HBM_CHANNELS)
+    assert u280_grid(hbm_split=0.75).slot_caps == left.slot_caps
+
+
+def test_search_space_hbm_axis():
+    sp = SearchSpace(seeds=(0,), utils=(0.6,), hbm_splits=(0.25, 0.5, 0.75))
+    assert sp.size == 3
+    pts = sp.grid_points()
+    assert [p.hbm_split for p in pts] == [0.25, 0.5, 0.75]
+    # the default single-value axis adds nothing and keeps old enumeration
+    assert SearchSpace(seeds=(0, 1), utils=(0.6, 0.7)).size == 4
+    assert SearchPoint().hbm_split == 0.5
+    assert SearchPoint(hbm_split=0.3).floorplan_key[-1] == 0.3
+    # continuous axis sampling stays in range and refines around winners
+    cont = SearchSpace(utils=(0.7,), hbm_splits=Interval(0.0, 1.0))
+    draws = cont.sample(8, seed=1)
+    assert all(0.0 <= p.hbm_split <= 1.0 for p in draws)
+    refined = cont.refined([draws[0]])
+    assert isinstance(refined.hbm_splits, Interval)
+    assert refined.hbm_splits.span < 1.0
+
+
+def test_autobridge_hbm_split_changes_working_grid():
+    """A tilted binding really reaches the floorplanner: the plan's grid
+    carries the re-bound slot_caps, and distinct splits are distinct
+    floorplan cache keys."""
+    from repro.core.autobridge import initial_floorplan_key
+    d = generate_design(0, FAMILIES["hbm"])
+    grid = u280_grid()
+    k_sym = initial_floorplan_key(d.graph, grid)
+    k_tilt = initial_floorplan_key(d.graph, grid, hbm_split=0.75)
+    assert k_sym != k_tilt
+    plan = autobridge(d.graph, grid, hbm_split=0.75)
+    caps = plan.floorplan.grid.slot_caps
+    assert caps[(0, 0)]["hbm_channels"] > caps[(0, 1)]["hbm_channels"]
+
+
+# ---------------------------------------------------------------------------
+# check_corpus gate
+# ---------------------------------------------------------------------------
+
+def _corpus_doc(**over):
+    doc = {
+        "suite": "corpus",
+        "designs": 10,
+        "lint": {"checked": 10, "errors": 0, "codes": []},
+        "differential": {"ok": True, "designs": 12, "mismatches": [],
+                         "verdicts_checked": 12, "sims_checked": 12,
+                         "feasible": 5, "infeasible": 2,
+                         "searches_checked": 1},
+        "engine": {"fallback": 0},
+        "buckets": [
+            {"design": "dag-00000", "family": "dag",
+             "hypervolume": 100.0, "hbm_axis": False},
+            {"design": "hbm-00000", "family": "hbm",
+             "hypervolume": 120.0, "hbm_axis": True},
+        ],
+    }
+    doc.update(over)
+    return doc
+
+
+def test_check_corpus_gate_passes_and_fails():
+    cr = _load_bench("check_regression")
+    base = _corpus_doc()
+    assert cr.check_corpus(_corpus_doc(), base, 0.02) == []
+    # lint errors fail
+    bad = _corpus_doc(lint={"checked": 10, "errors": 2,
+                            "codes": ["A005-zero-capacity"]})
+    assert any("lint" in e for e in cr.check_corpus(bad, base, 0.02))
+    # differential mismatch fails, quoting the mismatch
+    bad = _corpus_doc()
+    bad["differential"] = dict(bad["differential"], ok=False,
+                               mismatches=["[sim] dag-00001 fp=x: boom"])
+    assert any("boom" in e for e in cr.check_corpus(bad, base, 0.02))
+    # a stage that never ran fails
+    bad = _corpus_doc()
+    bad["differential"] = dict(bad["differential"], infeasible=0)
+    assert any("infeasible" in e for e in cr.check_corpus(bad, base, 0.02))
+    # silent backend fallback fails
+    bad = _corpus_doc(engine={"fallback": 1})
+    assert any("fallback" in e for e in cr.check_corpus(bad, base, 0.02))
+    # hypervolume regression beyond tol fails; within tol passes
+    bad = _corpus_doc()
+    bad["buckets"][1] = dict(bad["buckets"][1], hypervolume=100.0)
+    assert any("hypervolume" in e for e in cr.check_corpus(bad, base, 0.02))
+    ok = _corpus_doc()
+    ok["buckets"][1] = dict(ok["buckets"][1], hypervolume=119.0)
+    assert cr.check_corpus(ok, base, 0.02) == []
+    # missing bucket fails
+    bad = _corpus_doc(buckets=[_corpus_doc()["buckets"][0]])
+    assert any("missing" in e for e in cr.check_corpus(bad, base, 0.02))
+    # no HBM-axis bucket fails
+    bad = _corpus_doc()
+    bad["buckets"][1] = dict(bad["buckets"][1], hbm_axis=False)
+    assert any("HBM" in e for e in cr.check_corpus(bad, base, 0.02))
+    # corpus shrink fails
+    bad = _corpus_doc()
+    bad["differential"] = dict(bad["differential"], designs=6)
+    assert any("shrank" in e for e in cr.check_corpus(bad, base, 0.02))
+    # main() dispatches the corpus suite
+    import json
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        cur_p = os.path.join(td, "cur.json")
+        with open(cur_p, "w") as f:
+            json.dump(_corpus_doc(), f)
+        assert cr.main([cur_p, cur_p]) == 0
+
+
+def test_corpus_suite_small_run_end_to_end(tmp_path):
+    """The bench suite itself on a tiny budget: JSON schema complete,
+    differential ok, lint clean, and the gate accepts the run against the
+    committed baseline's *structure* (self-comparison)."""
+    cs = _load_bench("corpus_suite")
+    out = cs.main(["--designs", "10", "--fuzz", "6",
+                   "--search-per-family", "1", "--floorplans", "8",
+                   "--json", str(tmp_path / "BENCH_corpus.json")])
+    assert out["suite"] == "corpus"
+    assert out["lint"]["errors"] == 0
+    assert out["differential"]["ok"] is True
+    assert out["engine"]["fallback"] == 0
+    assert any(b["hbm_axis"] for b in out["buckets"])
+    cr = _load_bench("check_regression")
+    assert cr.main([str(tmp_path / "BENCH_corpus.json"),
+                    str(tmp_path / "BENCH_corpus.json")]) == 0

@@ -19,7 +19,7 @@ import pytest
 # resolves to a module whose examples still run.
 MODULES = ("repro.search.engine", "repro.search.space", "repro.search.pareto",
            "repro.core.explorer", "repro.core.simulate", "repro.fpga.archs",
-           "repro.analysis")
+           "repro.analysis", "repro.corpus")
 
 
 @pytest.mark.parametrize("name", MODULES)

@@ -25,8 +25,8 @@ from _propcheck import given, settings, strategies as st
 
 from repro.core import SimJob, simulate_batch
 from repro.core.simulate import _jax_ready
+from repro.corpus import random_graph as _random_graph
 from repro.kernels.padded_batch import build_padded_batch
-from test_simulate_event import _random_graph
 
 jax_only = pytest.mark.skipif(not _jax_ready(), reason="jax not installed")
 

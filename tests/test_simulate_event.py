@@ -14,49 +14,14 @@ from repro.core import (SimJob, TaskGraphBuilder, pipeline_headroom,
                         simulate, simulate_batch)
 from repro.core.graph import Stream, Task, TaskGraph
 from repro.core.simulate import _jax_ready
+# the corpus fuzz family subsumes the old ad-hoc helper: layered DAGs
+# with random fanin, zero-depth FIFOs, control streams, detached sinks,
+# skip edges and (allow_cycle) occasional feedback cycles
+from repro.corpus import random_graph as _random_graph
 
 #: does backend="auto" promote to the jitted sweep in this environment?
 _HAVE_JAX = _jax_ready()
 jax_only = pytest.mark.skipif(not _HAVE_JAX, reason="jax not installed")
-
-
-def _random_graph(rng: random.Random, allow_cycle: bool = False) -> TaskGraph:
-    """Layered DAG with random fanin, depths, control streams, detached
-    sinks, an occasional reconvergent skip edge, and (``allow_cycle``) an
-    occasional feedback edge closing a dependency cycle."""
-    g = TaskGraph("rand")
-    layers = []
-    nid = 0
-    for li in range(rng.randint(2, 4)):
-        layer = []
-        for _ in range(rng.randint(1, 3)):
-            name = f"t{nid}"
-            nid += 1
-            g.add_task(Task(name=name,
-                            detached=(li > 0 and rng.random() < 0.1)))
-            layer.append(name)
-        layers.append(layer)
-    sid = 0
-    for li in range(1, len(layers)):
-        for dst in layers[li]:
-            for src in rng.sample(layers[li - 1],
-                                  rng.randint(1, len(layers[li - 1]))):
-                g.add_stream(Stream(name=f"e{sid}", src=src, dst=dst,
-                                    depth=rng.randint(0, 3),
-                                    control=(rng.random() < 0.1)),
-                             validate=False)       # depth may be 0
-                sid += 1
-    if len(layers) >= 3 and rng.random() < 0.7:   # reconvergent skip edge
-        g.add_stream(Stream(name=f"e{sid}", src=layers[0][0],
-                            dst=layers[-1][0], depth=rng.randint(0, 3)),
-                     validate=False)
-        sid += 1
-    if allow_cycle and rng.random() < 0.5:        # feedback edge (may
-        g.add_stream(Stream(name=f"e{sid}",       # deadlock: depth 0..2)
-                            src=layers[-1][0], dst=layers[0][0],
-                            depth=rng.randint(0, 2)),
-                     validate=False)
-    return g
 
 
 def _assert_engines_agree(g, **kw):

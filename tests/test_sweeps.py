@@ -504,3 +504,36 @@ def test_check_regression_store_gate(tmp_path):
     assert cr.main([write("ok.json", doc()), base]) == 0
     assert cr.main([write("conf.json", doc(conflicts=1)), base]) == 1
     assert cr.main([write("quar.json", doc(quarantined=2)), base]) == 1
+
+
+def test_fmax_suite_converged_parallel_surrogate_fast_subset(tmp_path):
+    """Tier-1 coverage for the converged ``--jobs N --proposer surrogate``
+    path (previously nightly-only): on a fast-subset design the parallel
+    surrogate run must reproduce the sequential surrogate run's rows
+    bit-identically (the pool only relocates deterministic ILP solves),
+    record the worker dispatch/merge counters, and stamp the proposer and
+    jobs into the JSON sim block the CI gate reads."""
+    import json
+
+    fs = _load_bench("fmax_suite")
+    kw = dict(verbose=False, sim_firings=60, subset=("stencil_x2",),
+              proposer="surrogate")
+    seq_rows = fs.main_converged(**kw)
+    par_path = tmp_path / "par.json"
+    par_rows = fs.main_converged(jobs=2, json_path=str(par_path), **kw)
+    assert seq_rows and len(seq_rows) == len(par_rows)
+    identity = ("opt_mhz", "util", "frontier", "hypervolume",
+                "rounds_run", "points_evaluated", "cycles_opt",
+                "cycles_base")
+    for a, b in zip(seq_rows, par_rows):
+        for field in identity:
+            assert a[field] == b[field], (a["name"], field)
+        assert b["converged"] in (True, False)
+    doc = json.loads(par_path.read_text())
+    assert doc["converge"] is True
+    sim = doc["sim"]
+    assert sim["proposer"] == "surrogate"
+    assert sim["pool"]["jobs"] == 2
+    assert sim["pool"]["merged"] == sim["pool"]["dispatched"]
+    assert sim["counts"]["fallback"] == 0
+    assert sim["floorplan"]["cache_hits"] > 0
