@@ -70,6 +70,14 @@ regress beyond tolerance:
   bucket's frontier hypervolume within ``--tol``, and the HBM
   channel-binding axis exercised by at least one bucket.
 
+* all suites, instrumented runs (any JSON with an ``obs`` block from
+  ``repro.obs``): the run must have recorded spans (zero means the
+  profiling hooks silently stopped firing), closed every span, orphaned
+  no worker spans, and covered >= 90% of wall time with stage spans; a
+  ``--trace`` export (``trace_file``, resolved next to the BENCH JSON)
+  must pass Chrome/Perfetto trace_event schema validation — monotonic
+  per-track timestamps, matched B/E pairs, pid/tid on every event.
+
 Usage:
     python benchmarks/check_regression.py CURRENT.json BASELINE.json [--tol 0.02]
 """
@@ -78,12 +86,81 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def _validate_trace(doc: dict) -> list[str]:
+    """Schema-validate a Chrome/Perfetto trace_event document via
+    ``repro.obs.trace.validate_chrome``; resolves ``src/`` relative to this
+    file so the gate works without PYTHONPATH."""
+    try:
+        from repro.obs.trace import validate_chrome
+    except ImportError:
+        here = os.path.dirname(os.path.abspath(__file__))
+        sys.path.insert(0, os.path.join(here, "..", "src"))
+        from repro.obs.trace import validate_chrome
+    return validate_chrome(doc)
+
+
+def check_obs(cur: dict, *, label: str, json_dir: str = ".") -> list[str]:
+    """The observability gate, applied to every instrumented run.
+
+    An instrumented run (one whose JSON carries an ``obs`` block) must have
+    recorded at least one span, closed every span it opened, parented every
+    worker span back under the dispatching process, and covered >= 90% of
+    the suite's wall clock with stage spans — a zero-span or low-coverage
+    block means the profiling hooks silently stopped firing.  When the run
+    exported a ``--trace`` file, the file (resolved relative to the BENCH
+    JSON) must additionally pass trace_event schema validation: monotonic
+    per-track timestamps, matched B/E pairs, pid/tid on every event."""
+    sim = cur.get("sim")
+    obs = sim.get("obs") if isinstance(sim, dict) else None
+    if obs is None:
+        obs = cur.get("obs")  # the corpus suite keeps its block top-level
+    if obs is None:
+        return []
+    errors = []
+    if not obs.get("enabled", False):
+        errors.append(f"{label} obs block present but tracing was disabled")
+    if not obs.get("spans", 0):
+        errors.append(
+            f"{label} instrumented run recorded zero spans — the profiling "
+            f"hooks silently stopped firing"
+        )
+    if obs.get("unclosed", 0):
+        errors.append(
+            f"{label} trace has {obs['unclosed']} unclosed span(s) — an "
+            f"instrumented stage exited without ending its span"
+        )
+    if obs.get("orphans", 0):
+        errors.append(
+            f"{label} trace has {obs['orphans']} orphaned worker span(s) "
+            f"(parent id missing from the trace)"
+        )
+    coverage = obs.get("stage_coverage", 0.0)
+    if obs.get("spans", 0) and coverage < 0.9:
+        errors.append(
+            f"{label} stage spans cover only {coverage:.0%} of wall time "
+            f"(expected >= 90%; the hot path is escaping instrumentation)"
+        )
+    trace_file = obs.get("trace_file")
+    if trace_file:
+        path = os.path.join(json_dir, trace_file)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as exc:
+            errors.append(f"{label} trace file {trace_file} unreadable: {exc}")
+        else:
+            for err in _validate_trace(doc):
+                errors.append(f"{label} trace {trace_file}: {err}")
+    return errors
 
 
 def check_sim(cur: dict, *, label: str) -> list[str]:
@@ -452,7 +529,7 @@ def check_chaos(cur: dict, base: dict) -> list[str]:
     return errors
 
 
-def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
+def check_fmax(cur: dict, base: dict, tol: float, *, json_dir: str = ".") -> list[str]:
     errors = []
     cs, bs = cur["summary"], base["summary"]
     floor = bs["opt_avg_mhz"] * (1.0 - tol)
@@ -487,6 +564,7 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
         errors += check_sim(cur, label="fast subset")
     errors += check_analysis(cur, base, label="fmax suite")
     errors += check_store(cur, label="fmax suite")
+    errors += check_obs(cur, label="fmax suite", json_dir=json_dir)
     cur_rows = {(r["name"], r["board"]): r for r in cur["rows"]}
     for r in base["rows"]:
         key = (r["name"], r["board"])
@@ -498,11 +576,14 @@ def check_fmax(cur: dict, base: dict, tol: float) -> list[str]:
     return errors
 
 
-def check_throughput(cur: dict, base: dict, tol: float) -> list[str]:
+def check_throughput(
+    cur: dict, base: dict, tol: float, *, json_dir: str = "."
+) -> list[str]:
     # the throughput suite IS the CI fast suite: always gate vectorization
     errors = check_sim(cur, label="throughput suite")
     errors += check_analysis(cur, base, label="throughput suite")
     errors += check_store(cur, label="throughput suite")
+    errors += check_obs(cur, label="throughput suite", json_dir=json_dir)
     cur_rows = {r["name"]: r for r in cur["rows"]}
     for r in base["rows"]:
         name = r["name"]
@@ -519,7 +600,9 @@ def check_throughput(cur: dict, base: dict, tol: float) -> list[str]:
     return errors
 
 
-def check_corpus(cur: dict, base: dict, tol: float) -> list[str]:
+def check_corpus(
+    cur: dict, base: dict, tol: float, *, json_dir: str = "."
+) -> list[str]:
     """The generated-corpus gate (``benchmarks/corpus_suite.py``):
 
     * every clean-family design lints clean (zero structure errors);
@@ -576,6 +659,7 @@ def check_corpus(cur: dict, base: dict, tol: float) -> list[str]:
     if not any(b.get("hbm_axis") for b in cur.get("buckets", [])):
         errors.append(
             "no search bucket exercised the HBM channel-binding axis")
+    errors += check_obs(cur, label="corpus suite", json_dir=json_dir)
     return errors
 
 
@@ -592,17 +676,18 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     cur, base = _load(args.current), _load(args.baseline)
+    json_dir = os.path.dirname(os.path.abspath(args.current))
     if cur.get("suite") != base.get("suite"):
         print(
             f"suite mismatch: current={cur.get('suite')} baseline={base.get('suite')}"
         )
         return 2
     if cur.get("suite") == "fmax_suite":
-        errors = check_fmax(cur, base, args.tol)
+        errors = check_fmax(cur, base, args.tol, json_dir=json_dir)
     elif cur.get("suite") == "throughput":
-        errors = check_throughput(cur, base, args.tol)
+        errors = check_throughput(cur, base, args.tol, json_dir=json_dir)
     elif cur.get("suite") == "corpus":
-        errors = check_corpus(cur, base, args.tol)
+        errors = check_corpus(cur, base, args.tol, json_dir=json_dir)
     else:
         print(f"unknown suite {cur.get('suite')!r}")
         return 2

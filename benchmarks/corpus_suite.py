@@ -18,6 +18,7 @@ Three phases, one ``BENCH_corpus.json``:
 Usage:
     python benchmarks/corpus_suite.py [--designs 200] [--fuzz 40]
         [--seed 0] [--search-per-family 2] [--jobs 2] [--json OUT.json]
+        [--trace PATH]
 """
 from __future__ import annotations
 
@@ -29,6 +30,7 @@ from repro.analysis import analysis_counts, analyze, reset_analysis_counts
 from repro.core import engine_counts, reset_engine_counts
 from repro.corpus import CLEAN_FAMILIES, run_differential, sample_corpus
 from repro.fpga import u280_grid
+from repro.obs import bench_obs_block, trace as obs_trace
 from repro.search.engine import explore_design_space
 from repro.search.pareto import hypervolume, objective_vector
 from repro.search.space import SearchSpace
@@ -65,60 +67,73 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--surrogate", action="store_true", default=True,
                     help="include the surrogate-vs-uniform check")
     ap.add_argument("--json", dest="json_path", default=None)
+    ap.add_argument("--trace", dest="trace_path", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON profile "
+                         "of the run to PATH")
     args = ap.parse_args(argv)
 
     t0 = time.perf_counter()
+    obs_trace.enable(clear=True)
     grid = u280_grid()
     per_family = max(1, args.designs // len(CLEAN_FAMILIES))
     corpus = {fam: sample_corpus(fam, per_family, seed=args.seed)
               for fam in CLEAN_FAMILIES}
     fuzz = sample_corpus("fuzz", args.fuzz, seed=args.seed)
 
-    # phase 1: lint gate — clean families must have zero structure errors
-    lint_checked, lint_errors, codes = 0, 0, set()
-    for designs in corpus.values():
-        for d in designs:
-            rep = analyze(d.graph, grid=grid, passes=("structure",))
-            lint_checked += 1
-            if not rep.ok:
-                lint_errors += 1
-                codes.update(rep.codes())
+    with obs_trace.span("bench.suite", suite="corpus"):
+        # phase 1: lint gate — clean families must have zero structure errors
+        lint_checked, lint_errors, codes = 0, 0, set()
+        with obs_trace.span("corpus.lint",
+                            designs=sum(len(ds) for ds in corpus.values())):
+            for designs in corpus.values():
+                for d in designs:
+                    rep = analyze(d.graph, grid=grid, passes=("structure",))
+                    lint_checked += 1
+                    if not rep.ok:
+                        lint_errors += 1
+                        codes.update(rep.codes())
 
-    # phases 2+3 under shared engine/analysis counters
-    reset_engine_counts()
-    reset_analysis_counts()
-    all_designs = [d for ds in corpus.values() for d in ds] + fuzz
-    diff = run_differential(
-        all_designs, grid=grid, floorplan_limit=args.floorplans,
-        search_designs=args.search_per_family, search_jobs=args.jobs,
-        check_surrogate=args.surrogate)
+        # phases 2+3 under shared engine/analysis counters
+        reset_engine_counts()
+        reset_analysis_counts()
+        all_designs = [d for ds in corpus.values() for d in ds] + fuzz
+        with obs_trace.span("corpus.differential", designs=len(all_designs)):
+            diff = run_differential(
+                all_designs, grid=grid, floorplan_limit=args.floorplans,
+                search_designs=args.search_per_family, search_jobs=args.jobs,
+                check_surrogate=args.surrogate)
 
-    buckets = []
-    for fam in CLEAN_FAMILIES:
-        space = _bucket_space(fam)
-        for d in corpus[fam][:args.search_per_family]:
-            res = explore_design_space(d.graph, grid, space=space,
-                                       sim_firings=d.firings)
-            vecs = [objective_vector(c) for c in res.frontier]
-            hv = hypervolume(vecs, HV_REF)
-            row = {
-                "family": fam,
-                "design": d.name,
-                "fingerprint": d.fingerprint,
-                "tasks": len(d.graph.tasks),
-                "streams": len(d.graph.streams),
-                "points": res.space_size,
-                "feasible": sum(1 for c in res.candidates
-                                if c.plan is not None),
-                "frontier": len(res.frontier),
-                "hypervolume": hv,
-                "hbm_axis": space.hbm_splits != (0.5,),
-            }
-            buckets.append(row)
-            print(f"corpus,{row['design']},0,hv={hv:.1f} "
-                  f"frontier={row['frontier']} feasible={row['feasible']}"
-                  f"{' hbm_axis' if row['hbm_axis'] else ''}", flush=True)
+        buckets = []
+        with obs_trace.span("corpus.buckets",
+                            per_family=args.search_per_family):
+            for fam in CLEAN_FAMILIES:
+                space = _bucket_space(fam)
+                for d in corpus[fam][:args.search_per_family]:
+                    res = explore_design_space(d.graph, grid, space=space,
+                                               sim_firings=d.firings)
+                    vecs = [objective_vector(c) for c in res.frontier]
+                    hv = hypervolume(vecs, HV_REF)
+                    row = {
+                        "family": fam,
+                        "design": d.name,
+                        "fingerprint": d.fingerprint,
+                        "tasks": len(d.graph.tasks),
+                        "streams": len(d.graph.streams),
+                        "points": res.space_size,
+                        "feasible": sum(1 for c in res.candidates
+                                        if c.plan is not None),
+                        "frontier": len(res.frontier),
+                        "hypervolume": hv,
+                        "hbm_axis": space.hbm_splits != (0.5,),
+                    }
+                    buckets.append(row)
+                    print(f"corpus,{row['design']},0,hv={hv:.1f} "
+                          f"frontier={row['frontier']} "
+                          f"feasible={row['feasible']}"
+                          f"{' hbm_axis' if row['hbm_axis'] else ''}",
+                          flush=True)
 
+    obs_block = bench_obs_block(time.perf_counter() - t0, args.trace_path)
     out = {
         "suite": "corpus",
         "seed": args.seed,
@@ -132,11 +147,16 @@ def main(argv: list[str] | None = None) -> dict:
         "engine": engine_counts(),
         "analysis": analysis_counts(),
         "hbm_splits": list(HBM_SPLITS),
+        "obs": obs_block,
         "wall_s": time.perf_counter() - t0,
     }
     print(f"corpus,summary,0,designs={lint_checked}+{len(fuzz)}fuzz "
           f"lint_errors={lint_errors} differential_ok={diff.ok} "
           f"fallbacks={out['engine'].get('fallback', 0)}", flush=True)
+    print(f"corpus,OBS,0,spans={obs_block['spans']} "
+          f"coverage={obs_block['stage_coverage']:.2f}"
+          + (f" trace={obs_block['trace_file']}" if args.trace_path else ""),
+          flush=True)
     if args.json_path:
         with open(args.json_path, "w") as f:
             json.dump(out, f, indent=1, sort_keys=True)

@@ -78,10 +78,13 @@ from repro.core import (FloorplanCache, InfeasibleError, Interval,
                         reset_floorplan_counts, search_until_converged,
                         timed_pool_simulations)
 from repro.fpga import benchmarks as B, grid_for
+from repro.obs import bench_obs_block, trace as obs_trace
 from repro.search import (DiskFloorplanStore, fault_counts, pool_counts,
                           reset_fault_counts, reset_pool_counts,
                           reset_store_counts, store_counts)
 from repro.search.faults import active_plan
+from repro.search.pool import pool_task_stats
+from repro.search.store import store_lookup_stats
 
 UTIL_SWEEP = (0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.0)
 
@@ -242,23 +245,33 @@ def summarize(rows: list[dict]) -> dict:
 def main(verbose: bool = True, sim_firings: int | None = DEFAULT_FIRINGS,
          subset: tuple[str, ...] | None = None,
          json_path: str | None = None,
-         backend: str = "auto") -> list[dict]:
+         backend: str = "auto",
+         trace_path: str | None = None) -> list[dict]:
     reset_analysis_counts()
-    entries = [prepare(name, board, graph)
-               for name, board, graph in B.autobridge_suite()
-               if subset is None or name in subset]
-    sim_meta = score_all(entries, sim_firings, backend)
-    rows = []
-    for entry in entries:
-        r = finish(entry, sim_firings)
-        rows.append(r)
-        if verbose:
+    obs_trace.enable(clear=True)
+    t0 = time.monotonic()
+    with obs_trace.span("bench.suite", suite="fmax"):
+        with obs_trace.span("bench.prepare"):
+            entries = [prepare(name, board, graph)
+                       for name, board, graph in B.autobridge_suite()
+                       if subset is None or name in subset]
+        sim_meta = score_all(entries, sim_firings, backend)
+        with obs_trace.span("bench.finish"):
+            rows = [finish(entry, sim_firings) for entry in entries]
+    if verbose:
+        for r in rows:
             base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
             opt = f"{r['opt_mhz']:.0f}" if not r["opt_fail"] else "FAIL"
             cyc = (f" cycles_delta={r['cycles_delta']}"
                    if "cycles_delta" in r else "")
             print(f"fmax_suite,{r['name']}@{r['board']},{r['wall_s']*1e6:.0f},"
                   f"base={base}MHz opt={opt}MHz util={r['util']}{cyc}")
+    obs_block = bench_obs_block(time.monotonic() - t0, trace_path)
+    if sim_meta is not None:
+        sim_meta["obs"] = obs_block
+    print(f"fmax_suite,OBS,0,spans={obs_block['spans']} "
+          f"coverage={obs_block['stage_coverage']:.2f}"
+          + (f" trace={obs_block['trace_file']}" if trace_path else ""))
     s = summarize(rows)
     print(f"fmax_suite,SUMMARY,0,designs={s['designs']} "
           f"base_avg={s['base_avg_mhz']:.0f}MHz (paper 147) "
@@ -296,7 +309,8 @@ def main_converged(verbose: bool = True,
                    proposer: str = "uniform",
                    backend: str = "auto",
                    store: str | None = None,
-                   checkpoint: str | None = None) -> list[dict]:
+                   checkpoint: str | None = None,
+                   trace_path: str | None = None) -> list[dict]:
     """The ``--converge`` path: per-design ``search_until_converged`` with a
     suite-wide ``FloorplanCache``; the JSON ``sim`` block carries the
     floorplan solve/cache-hit counters the CI gate checks, plus the
@@ -313,31 +327,43 @@ def main_converged(verbose: bool = True,
     reset_analysis_counts()
     reset_store_counts()
     reset_fault_counts()
+    obs_trace.enable(clear=True)
     cache = DiskFloorplanStore(store) if store else FloorplanCache()
     t0 = time.monotonic()
     rows = []
-    for name, board, graph in B.autobridge_suite():
-        if subset is not None and name not in subset:
-            continue
-        ckpt = (os.path.join(checkpoint, f"{name}@{board}")
-                if checkpoint else None)
-        r = run_converged(name, board, graph, sim_firings=sim_firings,
-                          cache=cache, jobs=jobs, proposer=proposer,
-                          backend=backend, checkpoint=ckpt)
-        rows.append(r)
-        if verbose:
-            base = f"{r['base_mhz']:.0f}" if not r["base_fail"] else "FAIL"
-            opt = f"{r['opt_mhz']:.0f}" if not r["opt_fail"] else "FAIL"
-            print(f"fmax_suite,{r['name']}@{r['board']},{r['wall_s']*1e6:.0f},"
-                  f"base={base}MHz opt={opt}MHz util={r['util']} "
-                  f"rounds={r['rounds_run']} converged={r['converged']} "
-                  f"points={r['points_evaluated']}")
+    with obs_trace.span("bench.suite", suite="fmax", mode="converged"):
+        for name, board, graph in B.autobridge_suite():
+            if subset is not None and name not in subset:
+                continue
+            ckpt = (os.path.join(checkpoint, f"{name}@{board}")
+                    if checkpoint else None)
+            with obs_trace.span("bench.design", design=f"{name}@{board}"):
+                r = run_converged(name, board, graph,
+                                  sim_firings=sim_firings,
+                                  cache=cache, jobs=jobs, proposer=proposer,
+                                  backend=backend, checkpoint=ckpt)
+            rows.append(r)
+            if verbose:
+                base = (f"{r['base_mhz']:.0f}" if not r["base_fail"]
+                        else "FAIL")
+                opt = f"{r['opt_mhz']:.0f}" if not r["opt_fail"] else "FAIL"
+                print(f"fmax_suite,{r['name']}@{r['board']},"
+                      f"{r['wall_s']*1e6:.0f},"
+                      f"base={base}MHz opt={opt}MHz util={r['util']} "
+                      f"rounds={r['rounds_run']} converged={r['converged']} "
+                      f"points={r['points_evaluated']}")
+    obs_block = bench_obs_block(time.monotonic() - t0, trace_path)
     fp = floorplan_counts()
-    pool = {"jobs": jobs, **pool_counts()}
+    pool = {"jobs": jobs, **pool_counts(), "task_s": pool_task_stats()}
     ana = analysis_counts()
     plan = active_plan()
-    store_block = (dict(store_counts(), entries=cache.disk_entries())
-                   if isinstance(cache, DiskFloorplanStore) else None)
+    # always emitted — zeroed (enabled=False) when no --store was given —
+    # so the store gate can never pass by silently not running
+    store_block = dict(store_counts())
+    store_block["enabled"] = isinstance(cache, DiskFloorplanStore)
+    store_block["entries"] = (cache.disk_entries()
+                              if store_block["enabled"] else 0)
+    store_block["lookup_s"] = store_lookup_stats()
     faults_block = {
         "plan": plan.as_dict() if plan is not None else None,
         "injected": fault_counts(),
@@ -346,14 +372,16 @@ def main_converged(verbose: bool = True,
         | {"store_quarantined": store_counts()["quarantined"],
            "merge_conflicts": fp["merge_conflicts"]},
     }
+    from repro.kernels.sim_sweep import sweep_cache_stats
     sim_meta = {"firings": sim_firings, "mode": "converged",
                 "counts": engine_counts(), "floorplan": fp,
                 "cache": cache.stats(), "pool": pool,
-                "analysis": ana,
+                "analysis": ana, "jit_cache": sweep_cache_stats(),
                 "store": store_block, "faults": faults_block,
                 "proposer": proposer, "backend": backend,
                 "points_evaluated": sum(r["points_evaluated"] for r in rows),
-                "wall_s": time.monotonic() - t0}
+                "wall_s": time.monotonic() - t0,
+                "obs": obs_block}
     s = summarize(rows)
     print(f"fmax_suite,SUMMARY,0,designs={s['designs']} "
           f"opt_avg={s['opt_avg_mhz']:.0f}MHz (converged) "
@@ -369,7 +397,10 @@ def main_converged(verbose: bool = True,
     print(f"fmax_suite,ANALYSIS,0,analyzed={ana['analyzed']} "
           f"doomed={ana['doomed']} skipped={ana['skipped']} "
           f"infeasible={ana['infeasible']}")
-    if store_block is not None:
+    print(f"fmax_suite,OBS,0,spans={obs_block['spans']} "
+          f"coverage={obs_block['stage_coverage']:.2f}"
+          + (f" trace={obs_block['trace_file']}" if trace_path else ""))
+    if store_block["enabled"]:
         print(f"fmax_suite,STORE,0,entries={store_block['entries']} "
               f"writes={store_block['writes']} "
               f"disk_hits={store_block['disk_hits']} "
@@ -426,6 +457,11 @@ if __name__ == "__main__":
                     help="converged mode: journal each design's search per "
                          "round under DIR so a killed run resumes with "
                          "bit-identical rows")
+    ap.add_argument("--trace", dest="trace_path", default=None,
+                    metavar="PATH",
+                    help="write the run's span trace as Chrome/Perfetto "
+                         "trace_event JSON at PATH (open in ui.perfetto.dev"
+                         "; summarize with python -m repro.obs)")
     args = ap.parse_args()
     sim = None if args.no_sim else (args.firings or None)
     subset = FAST_SUBSET if args.subset == "fast" else None
@@ -433,7 +469,8 @@ if __name__ == "__main__":
         main_converged(sim_firings=sim, subset=subset,
                        json_path=args.json_path, jobs=args.jobs,
                        proposer=args.proposer, backend=args.backend,
-                       store=args.store, checkpoint=args.checkpoint)
+                       store=args.store, checkpoint=args.checkpoint,
+                       trace_path=args.trace_path)
     else:
         main(sim_firings=sim, subset=subset, json_path=args.json_path,
-             backend=args.backend)
+             backend=args.backend, trace_path=args.trace_path)

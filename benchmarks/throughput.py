@@ -11,7 +11,7 @@ design's best Pareto-frontier candidate.
 CLI:
     python benchmarks/throughput.py [--json PATH] [--firings N]
                                     [--backend auto|numpy|jax|event]
-                                    [--store DIR]
+                                    [--store DIR] [--trace PATH]
 
 ``--store DIR`` routes every floorplan solve through a shared
 content-addressed ``DiskFloorplanStore`` — a second run against the same
@@ -22,20 +22,26 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 from repro.analysis import reset_analysis_counts
 from repro.core import (SearchSpace, prepare_design_space,
                         timed_pool_simulations)
 from repro.fpga import benchmarks as B, u250_grid, u280_grid
+from repro.obs import bench_obs_block, trace as obs_trace
 from repro.search import DiskFloorplanStore, reset_store_counts, store_counts
+from repro.search.store import store_lookup_stats
 
 DEFAULT_FIRINGS = 300
 
 
 def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None,
-        backend: str = "auto", store: str | None = None):
+        backend: str = "auto", store: str | None = None,
+        trace_path: str | None = None):
     reset_analysis_counts()
     reset_store_counts()
+    obs_trace.enable(clear=True)
+    t0 = time.monotonic()
     cache = DiskFloorplanStore(store) if store else None
     designs = [
         ("cnn_13x4", B.cnn(4), u250_grid()),
@@ -45,17 +51,22 @@ def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None,
         ("stencil_x4", B.stencil(4), u250_grid()),
     ]
     space = SearchSpace(utils=(0.70, 0.75, 0.80))
-    preps = [(name, prepare_design_space(graph, grid, space=space,
-                                         floorplan_cache=cache))
-             for name, graph, grid in designs]
+    with obs_trace.span("bench.suite", suite="throughput"):
+        with obs_trace.span("bench.prepare"):
+            preps = [(name, prepare_design_space(graph, grid, space=space,
+                                                 floorplan_cache=cache))
+                     for name, graph, grid in designs]
 
-    # the suite's whole simulation phase: one padded cross-design batch
-    _, sim_meta = timed_pool_simulations([prep for _, prep in preps],
-                                         firings=firings, backend=backend)
+        # the suite's whole simulation phase: one padded cross-design batch
+        _, sim_meta = timed_pool_simulations([prep for _, prep in preps],
+                                             firings=firings, backend=backend)
+
+        with obs_trace.span("bench.finish"):
+            results = [(name, prep.finish(sim_calls=1))
+                       for name, prep in preps]
 
     rows = []
-    for name, prep in preps:
-        res = prep.finish(sim_calls=1)
+    for name, res in results:
         cand = res.best
         assert not cand.sim.deadlocked, name
         assert cand.throughput_preserved, name
@@ -78,14 +89,22 @@ def run(firings: int = DEFAULT_FIRINGS, json_path: str | None = None,
           f"invocations={sim_meta['invocations']} "
           f"backends={'+'.join(sim_meta['backends'])} "
           f"wall={sim_meta['wall_s']:.3f}s")
-    if cache is not None:
-        sim_meta = dict(sim_meta,
-                        store=dict(store_counts(),
-                                   entries=cache.disk_entries()))
-        st = sim_meta["store"]
+    # always emit the store block — zeroed when no --store DIR was given,
+    # so downstream tooling never has to special-case its absence
+    store_block = dict(store_counts())
+    store_block["enabled"] = cache is not None
+    store_block["entries"] = cache.disk_entries() if cache is not None else 0
+    store_block["lookup_s"] = store_lookup_stats()
+    obs_block = bench_obs_block(time.monotonic() - t0, trace_path)
+    sim_meta = dict(sim_meta, store=store_block, obs=obs_block)
+    if store_block["enabled"]:
+        st = store_block
         print(f"throughput,STORE,0,entries={st['entries']} "
               f"writes={st['writes']} disk_hits={st['disk_hits']} "
               f"quarantined={st['quarantined']}")
+    print(f"throughput,OBS,0,spans={obs_block['spans']} "
+          f"coverage={obs_block['stage_coverage']:.2f}"
+          + (f" trace={obs_block['trace_file']}" if trace_path else ""))
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"suite": "throughput", "firings": firings,
@@ -106,12 +125,16 @@ def main():
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="persist floorplan solves to a DiskFloorplanStore "
                          "at DIR (re-runs become solve-free)")
+    ap.add_argument("--trace", dest="trace_path", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON profile "
+                         "of the run to PATH")
     args = ap.parse_args()
     if args.firings <= 0:
         ap.error("--firings must be positive (the cycle columns ARE the "
                  "benchmark; use fmax_suite.py --no-sim for a sim-free run)")
     run(firings=args.firings, json_path=args.json_path,
-        backend=args.backend, store=args.store)
+        backend=args.backend, store=args.store,
+        trace_path=args.trace_path)
 
 
 if __name__ == "__main__":

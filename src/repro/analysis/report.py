@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..obs import metrics as _metrics
+
 ERROR = "error"
 WARN = "warn"
 INFO = "info"
@@ -27,13 +29,14 @@ _SEVERITIES = (ERROR, WARN, INFO)
 # analyze() runs / doomed verdicts / gate-skipped candidates / structural
 # static-infeasibility verdicts recorded by ``autobridge(check=True)`` —
 # global like the engine/floorplan counters, reset per benchmark run.
-_ANALYSIS_COUNTS = {"analyzed": 0, "doomed": 0, "skipped": 0, "infeasible": 0}
+_ANALYSIS_COUNTS = _metrics.group(
+    "analysis",
+    {"analyzed": 0, "doomed": 0, "skipped": 0, "infeasible": 0})
 
 
 def reset_analysis_counts() -> None:
     """Zero the global static-analysis counters."""
-    for k in _ANALYSIS_COUNTS:
-        _ANALYSIS_COUNTS[k] = 0
+    _ANALYSIS_COUNTS.reset()
 
 
 def analysis_counts() -> dict[str, int]:

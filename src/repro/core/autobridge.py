@@ -37,6 +37,8 @@ from .balance import BalanceResult, CycleError, balance_graph
 from .devicegrid import SlotGrid
 from .floorplan import Floorplan, floorplan
 from .graph import TaskGraph
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .ilp import (InfeasibleError, merge_solve_counts, reset_solve_counts,
                   solve_counts)
 from .pipelining import PipelineAssignment, assign_pipelining
@@ -48,14 +50,14 @@ from .simulate import SimJob, SimResult, simulate_batch
 # answered from memory.  ``floorplan_counts()`` adds the bipartition-solver
 # invocation count from ``ilp`` so a sweep can report exactly how many ILPs
 # it paid for versus how many points it evaluated.
-_FP_COUNTS = {"solved": 0, "cache_hits": 0, "merge_conflicts": 0}
+_FP_COUNTS = _metrics.group(
+    "floorplan", {"solved": 0, "cache_hits": 0, "merge_conflicts": 0})
 
 
 def reset_floorplan_counts() -> None:
     """Zero the global floorplan solve/cache-hit counters (and the
     underlying bipartition-solver counter)."""
-    for k in _FP_COUNTS:
-        _FP_COUNTS[k] = 0
+    _FP_COUNTS.reset()
     reset_solve_counts()
 
 
@@ -237,14 +239,17 @@ class FloorplanCache:
             return dataclasses.replace(value, grid=grid)
         self.misses += 1
         _FP_COUNTS["solved"] += 1
-        try:
-            fp = floorplan(graph, grid, max_util=max_util,
-                           same_slot=same_slot, seed=seed,
-                           exact_threshold=exact_threshold,
-                           n_starts=n_starts, time_limit_s=time_limit_s)
-        except InfeasibleError as err:
-            self._put(k, ("err", str(err)))
-            raise
+        with _trace.span("floorplan.ilp", tasks=len(graph.tasks)) as rec:
+            try:
+                fp = floorplan(graph, grid, max_util=max_util,
+                               same_slot=same_slot, seed=seed,
+                               exact_threshold=exact_threshold,
+                               n_starts=n_starts, time_limit_s=time_limit_s)
+            except InfeasibleError as err:
+                if rec is not None:
+                    rec["args"]["infeasible"] = True
+                self._put(k, ("err", str(err)))
+                raise
         self._put(k, ("ok", fp))
         return fp
 
@@ -387,9 +392,10 @@ def autobridge(graph: TaskGraph, grid: SlotGrid, *,
                                exact_threshold=exact_threshold,
                                n_starts=n_starts, time_limit_s=time_limit_s)
         _FP_COUNTS["solved"] += 1
-        return floorplan(graph, grid, max_util=util, same_slot=groups,
-                         seed=seed, exact_threshold=exact_threshold,
-                         n_starts=n_starts, time_limit_s=time_limit_s)
+        with _trace.span("floorplan.ilp", tasks=len(graph.tasks)):
+            return floorplan(graph, grid, max_util=util, same_slot=groups,
+                             seed=seed, exact_threshold=exact_threshold,
+                             n_starts=n_starts, time_limit_s=time_limit_s)
 
     co_located: list[set[str]] = [set(g) for g in same_slot]
     demoted: set[str] = set()      # streams demoted to control (last resort)

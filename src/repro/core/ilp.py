@@ -29,6 +29,8 @@ from typing import Sequence
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+
 Area = dict[str, float]
 
 # Bipartition-solver invocations since the last reset.  Each floorplan runs
@@ -36,12 +38,12 @@ Area = dict[str, float]
 # "how many ILPs did a sweep actually pay for" — ``floorplan_counts()`` in
 # ``autobridge`` folds it into the cache-hit accounting that benchmarks and
 # the CI regression gate inspect.
-_SOLVE_COUNTS = {"bipartitions": 0}
+_SOLVE_COUNTS = _metrics.group("ilp", {"bipartitions": 0})
 
 
 def reset_solve_counts() -> None:
     """Zero the global bipartition-solver invocation counter."""
-    _SOLVE_COUNTS["bipartitions"] = 0
+    _SOLVE_COUNTS.reset()
 
 
 def solve_counts() -> dict[str, int]:

@@ -62,6 +62,8 @@ import warnings
 from collections import deque
 from typing import Mapping, Sequence
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .graph import TaskGraph
 
 try:  # NumPy is a hard dependency of the repo, but keep the engine gated.
@@ -122,14 +124,14 @@ class SimJob:
 # loops.  "fallback" ticks whenever ``backend="auto"`` silently degrades
 # below the backend it would normally pick (no NumPy, or knobs outside the
 # jax sweep's int32 range) — CI gates assert it stays zero.
-_ENGINE_INVOCATIONS = {"event": 0, "cycle": 0, "numpy": 0, "jax": 0,
-                       "fallback": 0}
+_ENGINE_INVOCATIONS = _metrics.group(
+    "sim.engine",
+    {"event": 0, "cycle": 0, "numpy": 0, "jax": 0, "fallback": 0})
 
 
 def reset_engine_counts() -> None:
     """Zero the global engine-invocation counters."""
-    for k in _ENGINE_INVOCATIONS:
-        _ENGINE_INVOCATIONS[k] = 0
+    _ENGINE_INVOCATIONS.reset()
 
 
 def engine_counts() -> dict[str, int]:
@@ -620,23 +622,26 @@ def simulate_batch(jobs: Sequence[SimJob | TaskGraph], *, firings: int,
                 resolved = "numpy"
         else:
             resolved = "numpy"
-    if resolved == "event":
-        return [simulate(j.graph, firings=firings, latency=j.latency,
-                         extra_capacity=j.extra_capacity, ii=j.ii,
-                         max_cycles=max_cycles, engine="event")
-                for j in norm]
-    sweep = (_simulate_batch_jax if resolved == "jax"
-             else _simulate_batch_numpy)
-    chunk = len(norm)
-    if max_bytes is not None:
-        chunk = max(1, min(chunk, int(max_bytes // _job_bytes_estimate(norm))))
-    if chunk >= len(norm):
-        return sweep(norm, firings=firings, max_cycles=max_cycles)
-    out: list[SimResult] = []
-    for i in range(0, len(norm), chunk):
-        out.extend(sweep(norm[i:i + chunk], firings=firings,
-                         max_cycles=max_cycles))
-    return out
+    with _trace.span("simulate.batch", backend=resolved, jobs=len(norm),
+                     firings=firings):
+        if resolved == "event":
+            return [simulate(j.graph, firings=firings, latency=j.latency,
+                             extra_capacity=j.extra_capacity, ii=j.ii,
+                             max_cycles=max_cycles, engine="event")
+                    for j in norm]
+        sweep = (_simulate_batch_jax if resolved == "jax"
+                 else _simulate_batch_numpy)
+        chunk = len(norm)
+        if max_bytes is not None:
+            chunk = max(1, min(chunk,
+                               int(max_bytes // _job_bytes_estimate(norm))))
+        if chunk >= len(norm):
+            return sweep(norm, firings=firings, max_cycles=max_cycles)
+        out: list[SimResult] = []
+        for i in range(0, len(norm), chunk):
+            out.extend(sweep(norm[i:i + chunk], firings=firings,
+                             max_cycles=max_cycles))
+        return out
 
 
 def _simulate_batch_jax(jobs: list[SimJob], *, firings: int,

@@ -54,6 +54,8 @@ except Exception:  # pragma: no cover - exercised by the no-jax CI leg
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .padded_batch import PaddedBatch
 
 # int32-safety threshold: keeping every knob below 2**30 leaves headroom
@@ -63,8 +65,10 @@ _SAFE_MAX = 1 << 30
 #: compile-cache bookkeeping, keyed by the bucketed (V, T*, S*, H) shape.
 #: jax's own jit cache does the actual reuse; these counters make it
 #: observable to tests and the BENCH ``sim.jit_cache`` metadata.
-_CACHE_STATS = {"compiles": 0, "hits": 0}
 _SEEN_SHAPES: set[tuple[int, int, int, int]] = set()
+_CACHE_STATS = _metrics.group(
+    "sim.jit_cache", {"compiles": 0, "hits": 0}, on_reset=_SEEN_SHAPES.clear
+)
 
 
 def sweep_cache_stats() -> dict[str, int]:
@@ -78,9 +82,7 @@ def reset_sweep_cache_stats() -> None:
     """Zero the compile-cache counters and forget seen shapes (jax's own
     jit cache is untouched — a 're-compile' after this reset is a cache
     hit inside jax, but counts as a compile here)."""
-    _CACHE_STATS["compiles"] = 0
-    _CACHE_STATS["hits"] = 0
-    _SEEN_SHAPES.clear()
+    _CACHE_STATS.reset()
 
 
 def _bucket(n: int) -> int:
@@ -250,9 +252,11 @@ def simulate_padded_jax(pb: PaddedBatch, *, firings: int, max_cycles: int):
     key = (V2, T2, S2, H2)
     if key in _SEEN_SHAPES:
         _CACHE_STATS["hits"] += 1
+        stage = "jit.execute"
     else:
         _SEEN_SHAPES.add(key)
         _CACHE_STATS["compiles"] += 1
+        stage = "jit.compile"
 
     i32 = np.int32
     lat = _pad2(pb.lat.astype(i32), (V2, S2), 0)
@@ -267,7 +271,7 @@ def simulate_padded_jax(pb: PaddedBatch, *, firings: int, max_cycles: int):
     cons = _pad2(cons, (V2, S2), T2)
     prod = _pad2(prod, (V2, S2), T2)
 
-    with warnings.catch_warnings():
+    with _trace.span(stage, shape=str(key), batch=V), warnings.catch_warnings():
         # donation is for accelerator backends; on CPU jax ignores it and
         # warns, which would otherwise spam every sweep
         warnings.filterwarnings(
@@ -289,9 +293,12 @@ def simulate_padded_jax(pb: PaddedBatch, *, firings: int, max_cycles: int):
             jnp.int32(firings),
             jnp.int32(max_cycles),
         )
-    return (
-        np.asarray(out_cycles)[:V],
-        np.asarray(out_dead)[:V],
-        np.asarray(fired)[:V],
-        int(steps),
-    )
+        # host transfer inside the span: jax dispatch is async, so the
+        # sweep's real wall time lands in these asarray calls
+        out = (
+            np.asarray(out_cycles)[:V],
+            np.asarray(out_dead)[:V],
+            np.asarray(fired)[:V],
+            int(steps),
+        )
+    return out

@@ -47,6 +47,8 @@ import random
 import signal
 import time
 
+from ..obs import metrics as _metrics
+
 #: env var carrying a JSON-encoded plan to subprocesses
 ENV_VAR = "REPRO_FAULTS"
 
@@ -57,13 +59,13 @@ _RATE_SITES = ("worker_crash", "worker_hang", "torn_write")
 # injections die with the worker; the pool counts those at dispatch time
 # (same seeded decision, taken parent-side) so BENCH JSON can report
 # injected-vs-observed without cross-process plumbing.
-_FAULT_COUNTS = {site: 0 for site in _RATE_SITES} | {"parent_kill": 0}
+_FAULT_COUNTS = _metrics.group(
+    "faults", {site: 0 for site in _RATE_SITES} | {"parent_kill": 0})
 
 
 def reset_fault_counts() -> None:
     """Zero this process's injected-fault counters."""
-    for k in _FAULT_COUNTS:
-        _FAULT_COUNTS[k] = 0
+    _FAULT_COUNTS.reset()
 
 
 def fault_counts() -> dict[str, int]:

@@ -8,11 +8,13 @@ ships each *unique-floorplan* point to a ``concurrent.futures
 co-optimization against a fresh ``FloorplanCache`` (capturing every solve of
 the cycle-feedback chain, infeasibility verdicts included) and returns
 
-    (its cache, its counter deltas, the error string if infeasible)
+    (its cache, its registry delta, its trace spans, the error string)
 
 which the parent merges back — ``FloorplanCache.merge`` for the entries,
-``merge_floorplan_counts`` for the per-process global counters that would
-otherwise silently read 0 in the parent.  The engine then *replays* the
+the generic ``repro.obs.metrics.merge`` for the per-process counters that
+would otherwise silently read 0 in the parent, and ``trace.absorb`` for
+the worker's spans (parented under the dispatching round via the trace
+token the submit path forwards).  The engine then *replays* the
 round in-process against the pre-warmed cache, so every floorplan lookup is
 a hit and the produced candidates are **bit-identical** to a sequential run:
 ``floorplan()`` is deterministic, and the replay path is exactly the
@@ -59,12 +61,13 @@ from concurrent.futures.process import BrokenProcessPool
 from typing import Sequence
 
 from repro.core.autobridge import (FloorplanCache, autobridge,
-                                   floorplan_counts, initial_floorplan_key,
-                                   merge_floorplan_counts)
+                                   initial_floorplan_key)
 from repro.core.devicegrid import SlotGrid
 from repro.core.graph import TaskGraph
 from repro.core.ilp import InfeasibleError
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from . import faults
 from .space import SearchPoint
 
@@ -73,10 +76,12 @@ from .space import SearchPoint
 # benchmarks record these in the BENCH JSON ``sim.pool`` block and the CI
 # gate checks a parallel run really dispatched and merged worker results
 # (and, in the chaos job, that the fault machinery really fired).
-_POOL_COUNTS = {"dispatched": 0, "merged": 0, "worker_solves": 0,
-                "worker_infeasible": 0, "static_skipped": 0,
-                "retried": 0, "timed_out": 0, "quarantined": 0,
-                "pool_rebuilds": 0}
+_POOL_COUNTS = _metrics.group(
+    "pool",
+    {"dispatched": 0, "merged": 0, "worker_solves": 0,
+     "worker_infeasible": 0, "static_skipped": 0,
+     "retried": 0, "timed_out": 0, "quarantined": 0,
+     "pool_rebuilds": 0})
 
 #: default per-future deadline before a point's workers are killed and the
 #: point re-dispatched (override: ``REPRO_POOL_TIMEOUT_S`` or the
@@ -88,15 +93,29 @@ DEFAULT_RETRIES = 3
 DEFAULT_CRASH_LIMIT = 3
 
 
+#: submit→merge latency per dispatched task, labelled by outcome —
+#: the pool queue/dispatch timing the BENCH ``sim.pool.task_s`` block
+#: and the trace summary surface.
+_TASK_HIST = _metrics.histogram("pool.task_s")
+
+
 def reset_pool_counts() -> None:
     """Zero the global worker-pool dispatch/merge counters."""
-    for k in _POOL_COUNTS:
-        _POOL_COUNTS[k] = 0
+    _POOL_COUNTS.reset()
+    _TASK_HIST.reset()
 
 
 def pool_counts() -> dict[str, int]:
     """Snapshot of pool dispatches/merges/worker solves since last reset."""
     return dict(_POOL_COUNTS)
+
+
+def pool_task_stats() -> dict:
+    """Submit→merge latency aggregates per outcome (BENCH
+    ``sim.pool.task_s``): count/sum/min/max/mean seconds for dispatched
+    tasks that merged cleanly vs. came back infeasible."""
+    return {"ok": _TASK_HIST.aggregate(outcome="ok"),
+            "infeasible": _TASK_HIST.aggregate(outcome="infeasible")}
 
 
 @dataclasses.dataclass
@@ -156,17 +175,29 @@ def _point_token(pt_kwargs: dict) -> str:
     return repr(tuple(sorted(pt_kwargs.items())))
 
 
+#: registry entries a worker's delta must NOT carry home: fault
+#: injections are counted parent-side at dispatch (the worker's own
+#: counter usually dies with it — merging a survivor's would double),
+#: and the parent replays the full analysis pass itself, so worker-side
+#: analyzer runs are duplicate work the parent already counts.
+_WORKER_DELTA_EXCLUDE = ("faults", "analysis")
+
+
 def _solve_point(graph: TaskGraph, grid: SlotGrid, pt_kwargs: dict,
                  ab_kwargs: dict, token: str = "", attempt: int = 0,
-                 marker_dir: str | None = None,
-                 ) -> tuple[FloorplanCache, dict, str | None]:
+                 marker_dir: str | None = None, trace_token: str = "",
+                 trace_on: bool = False,
+                 ) -> tuple[FloorplanCache, dict, list, str | None]:
     """Worker entry point (module-level so it pickles by reference).
 
     Runs the full autobridge chain for one point against a fresh cache;
     the cache captures every floorplan solve of the feedback loop, so the
-    parent replay never pays an ILP.  Counter deltas are before/after
-    snapshots: pool workers are reused across tasks, so absolute counter
-    values would double-count.
+    parent replay never pays an ILP.  The metrics delta is a before/after
+    registry snapshot: pool workers are reused across tasks, so absolute
+    counter values would double-count.  The parent folds the delta back
+    with the one generic ``metrics.merge`` path and absorbs the worker's
+    trace spans, whose roots are parented on ``trace_token`` (the
+    dispatching process's innermost open span).
 
     ``marker_dir`` receives a started-marker file per attempt before any
     work (or injected fault) happens: when a crash breaks the pool, the
@@ -176,18 +207,19 @@ def _solve_point(graph: TaskGraph, grid: SlotGrid, pt_kwargs: dict,
         with open(os.path.join(marker_dir,
                                f"{_marker_name(token)}.{attempt}"), "w"):
             pass
+    _trace.begin_worker(trace_token, enable_tracing=trace_on)
     faults.fire("worker_hang", token, attempt)
     faults.fire("worker_crash", token, attempt)
-    before = floorplan_counts()
+    before = _metrics.snapshot()
     cache = FloorplanCache()
     err = None
-    try:
-        autobridge(graph, grid, cache=cache, **pt_kwargs, **ab_kwargs)
-    except InfeasibleError as e:
-        err = str(e)
-    after = floorplan_counts()
-    delta = {k: after[k] - before[k] for k in after}
-    return cache, delta, err
+    with _trace.span("pool.worker_solve", attempt=attempt or None):
+        try:
+            autobridge(graph, grid, cache=cache, **pt_kwargs, **ab_kwargs)
+        except InfeasibleError as e:
+            err = str(e)
+    delta = _metrics.delta(before, exclude=_WORKER_DELTA_EXCLUDE)
+    return cache, delta, _trace.drain(), err
 
 
 def _marker_name(token: str) -> str:
@@ -304,6 +336,8 @@ class _Task:
     #: deadlines missed
     timeouts: int = 0
     deadline: float = 0.0
+    #: ``time.monotonic()`` at the latest submit (queue+solve latency)
+    submitted_at: float = 0.0
 
 
 def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
@@ -365,6 +399,7 @@ def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
     plan = faults.active_plan()
 
     t0 = time.monotonic()
+    _span = _trace.begin("pool.warm", jobs=jobs, points=len(todo))
     tasks = []
     for pt in todo:
         kw = _point_kwargs(pt)
@@ -389,11 +424,13 @@ def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
                 if plan.decide(site, task.token, task.dispatches):
                     faults.count_injected(site)
         fut = ex.submit(_solve_point, graph, grid, _point_kwargs(task.pt),
-                        ab_kwargs, task.token, task.dispatches, marker_dir)
+                        ab_kwargs, task.token, task.dispatches, marker_dir,
+                        _trace.current_token(), _trace.enabled())
         if task.dispatches > 0:
             stats.retried += 1
         task.dispatches += 1
-        task.deadline = time.monotonic() + timeout_s
+        task.submitted_at = time.monotonic()
+        task.deadline = task.submitted_at + timeout_s
         pending[fut] = task
 
     def was_running(task: _Task) -> bool:
@@ -429,7 +466,7 @@ def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
             for fut in done:
                 task = pending.pop(fut)
                 try:
-                    wcache, delta, err = fut.result()
+                    wcache, delta, wspans, err = fut.result()
                 except (BrokenProcessPool,
                         concurrent.futures.BrokenExecutor,
                         concurrent.futures.CancelledError):
@@ -437,9 +474,13 @@ def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
                     requeue.append(task)
                     continue
                 cache.merge(wcache)
-                merge_floorplan_counts(delta)
+                _metrics.merge(delta)
+                _trace.absorb(wspans)
+                _TASK_HIST.observe(time.monotonic() - task.submitted_at,
+                                   outcome="infeasible" if err else "ok")
                 stats.merged += 1
-                stats.worker_solves += delta.get("solved", 0)
+                stats.worker_solves += (delta.get("floorplan", {})
+                                        .get("values", {}).get("solved", 0))
                 if err is not None:
                     stats.worker_infeasible += 1
             if broken:
@@ -487,6 +528,12 @@ def warm_floorplan_cache(graph: TaskGraph, grid: SlotGrid,
         if ex is not None:
             _hard_shutdown(ex)
         shutil.rmtree(marker_dir, ignore_errors=True)
+        if _span is not None:
+            _span["args"].update(
+                merged=stats.merged, retried=stats.retried,
+                timed_out=stats.timed_out, quarantined=stats.quarantined,
+                pool_rebuilds=stats.pool_rebuilds)
+        _trace.end(_span)
     stats.wall_s = time.monotonic() - t0
     for field in ("dispatched", "merged", "worker_solves",
                   "worker_infeasible", "retried", "timed_out",

@@ -41,10 +41,12 @@ import json
 import os
 import pickle
 import tempfile
+import time
 from pathlib import Path
 
 from repro.core.autobridge import FloorplanCache, _entry_values_equal
 
+from ..obs import metrics as _metrics
 from . import faults
 
 #: blob magic: repro floorplan store, format 1
@@ -55,19 +57,34 @@ _DIGEST_LEN = hashlib.sha256().digest_size
 # ``pool_counts``/``floorplan_counts``): benchmarks surface these in the
 # BENCH JSON ``sim.store`` block and the chaos gate asserts torn entries
 # really were quarantined.
-_STORE_COUNTS = {"writes": 0, "disk_hits": 0, "disk_misses": 0,
-                 "quarantined": 0, "evictions": 0, "conflicts": 0}
+_STORE_COUNTS = _metrics.group(
+    "store",
+    {"writes": 0, "disk_hits": 0, "disk_misses": 0,
+     "quarantined": 0, "evictions": 0, "conflicts": 0})
+
+#: disk lookup latency, labelled by outcome (hit / miss) — feeds the
+#: BENCH ``sim.store.lookup_s`` block and the top-N trace summary.
+_LOOKUP_HIST = _metrics.histogram("store.lookup_s")
 
 
 def reset_store_counts() -> None:
-    """Zero the global disk-store counters."""
-    for k in _STORE_COUNTS:
-        _STORE_COUNTS[k] = 0
+    """Zero the global disk-store counters (and the lookup-latency
+    histogram that rides along with them)."""
+    _STORE_COUNTS.reset()
+    _LOOKUP_HIST.reset()
 
 
 def store_counts() -> dict[str, int]:
     """Snapshot of disk-store writes/hits/quarantines since last reset."""
     return dict(_STORE_COUNTS)
+
+
+def store_lookup_stats() -> dict:
+    """Disk-lookup latency aggregates per outcome (BENCH
+    ``sim.store.lookup_s``): count/sum/min/max/mean seconds for disk
+    hits and misses since the last reset."""
+    return {"hit": _LOOKUP_HIST.aggregate(outcome="hit"),
+            "miss": _LOOKUP_HIST.aggregate(outcome="miss")}
 
 
 def _canonical(obj):
@@ -219,18 +236,22 @@ class DiskFloorplanStore(FloorplanCache):
         hit = self._entries.get(key)
         if hit is not None:
             return hit
+        t0 = time.perf_counter()
         path = self._entry_path(key)
         if not path.exists():
             self.disk_misses += 1
             _STORE_COUNTS["disk_misses"] += 1
+            _LOOKUP_HIST.observe(time.perf_counter() - t0, outcome="miss")
             return None
         loaded = self._load_entry(path)
         if loaded is None:
             self.disk_misses += 1
             _STORE_COUNTS["disk_misses"] += 1
+            _LOOKUP_HIST.observe(time.perf_counter() - t0, outcome="miss")
             return None
         self.disk_hits += 1
         _STORE_COUNTS["disk_hits"] += 1
+        _LOOKUP_HIST.observe(time.perf_counter() - t0, outcome="hit")
         self._entries[key] = loaded[1]
         return loaded[1]
 

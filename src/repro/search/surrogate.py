@@ -35,6 +35,7 @@ from typing import Sequence
 
 import numpy as np
 
+from ..obs import trace as _trace
 from .pareto import hypervolume, objective_vector
 from .space import SearchPoint, SearchSpace
 
@@ -137,6 +138,13 @@ class SurrogateProposer:
     def propose(self, space: SearchSpace, frontier: Sequence,
                 evaluated: Sequence, n: int, *, seed: int = 0,
                 ref: tuple | None = None) -> list[SearchPoint]:
+        with _trace.span("search.propose", proposer=self.name, n=n):
+            return self._propose(space, frontier, evaluated, n,
+                                 seed=seed, ref=ref)
+
+    def _propose(self, space: SearchSpace, frontier: Sequence,
+                 evaluated: Sequence, n: int, *, seed: int = 0,
+                 ref: tuple | None = None) -> list[SearchPoint]:
         # the uniform proposal is drawn EXACTLY as UniformProposer draws it
         # (not pool[:n]: a discrete space's oversampled pool degenerates to
         # grid order, which is not what sample(n) returns), so the

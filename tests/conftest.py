@@ -29,3 +29,29 @@ _JAX_ONLY = [
 collect_ignore = (
     [] if importlib.util.find_spec("jax") is not None else list(_JAX_ONLY)
 )
+
+import pytest  # noqa: E402  (after the sys.path bootstrap above)
+
+
+@pytest.fixture(autouse=True)
+def _obs_isolation():
+    """Per-test observability isolation: snapshot the process-wide metrics
+    registry and trace state before each test and restore them after, so
+    tests never see counters or spans leaked by an earlier test and no
+    longer need ad-hoc ``reset_*_counts()`` preambles."""
+    from repro.obs import metrics, trace
+
+    snap = metrics.snapshot()
+    was_enabled = trace.enabled()
+    saved_events = trace.drain()
+    try:
+        yield
+    finally:
+        metrics.restore(snap)
+        trace.clear()
+        trace.attach("")  # drop any worker-token base a test installed
+        if was_enabled:
+            trace.enable()
+        else:
+            trace.disable()
+        trace.absorb(saved_events)

@@ -312,7 +312,6 @@ def test_autobridge_check_raises_and_caches():
     g = _broken_for_floorplan()
     grid = grid_for("u250")
     cache = FloorplanCache()
-    reset_analysis_counts()
     with pytest.raises(InfeasibleError, match="static analysis: A001"):
         autobridge(g, grid, check=True, cache=cache)
     after_first = analysis_counts()
@@ -348,7 +347,6 @@ def test_pool_parent_side_static_short_circuit():
     grid = grid_for("u250")
     cache = FloorplanCache()
     pts = [SearchPoint(seed=0, max_util=u) for u in (0.7, 0.8)]
-    reset_analysis_counts()
     stats = warm_floorplan_cache(g, grid, pts, cache=cache, jobs=2,
                                  ab_kwargs={"check": True})
     assert stats.static_skipped == 2 and stats.dispatched == 0
@@ -389,7 +387,6 @@ def _frontier_key(res):
 def test_gate_skips_doomed_candidates_without_moving_frontier():
     grid = grid_for("u250")
     space = SearchSpace(utils=(0.7, 0.8), seeds=(0,))
-    reset_analysis_counts()
     gated = explore_design_space(_doomed_design(), grid, space=space,
                                  sim_firings=30)
     counts = analysis_counts()
@@ -412,7 +409,6 @@ def test_gate_noop_on_live_design():
                            if e[0] == "stencil_x2")
     grid = grid_for(board)
     space = SearchSpace(utils=(0.7, 0.8), seeds=(0,))
-    reset_analysis_counts()
     gated = explore_design_space(graph, grid, space=space, sim_firings=30)
     assert analysis_counts()["skipped"] == 0
     assert gated.frontier

@@ -192,7 +192,6 @@ def test_converged_search_hypervolume_never_regresses():
 
 
 def test_converged_search_reuses_one_baseline_simulation():
-    reset_engine_counts()
     res = search_until_converged(
         _vecadd(), u280_grid(),
         space=SearchSpace(utils=Interval(0.6, 0.9)),
@@ -304,7 +303,6 @@ def test_simulate_batch_chunking_matches_unchunked():
     jobs = [SimJob(g1), SimJob(g1, ii={"K0": 3}), SimJob(g2),
             SimJob(g2, latency={"str_a[0]": 2},
                    extra_capacity={"str_a[0]": 4})]
-    reset_engine_counts()
     full = simulate_batch(jobs, firings=40, backend="numpy")
     assert engine_counts()["numpy"] == 1
     reset_engine_counts()
@@ -327,7 +325,6 @@ def test_simulate_batch_chunking_matches_unchunked():
 
 def test_simulate_batch_default_budget_keeps_one_sweep():
     g = _chain_graph()
-    reset_engine_counts()
     simulate_batch([SimJob(g) for _ in range(20)], firings=30,
                    backend="numpy")
     assert engine_counts()["numpy"] == 1

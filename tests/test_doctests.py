@@ -19,7 +19,8 @@ import pytest
 # resolves to a module whose examples still run.
 MODULES = ("repro.search.engine", "repro.search.space", "repro.search.pareto",
            "repro.core.explorer", "repro.core.simulate", "repro.fpga.archs",
-           "repro.analysis", "repro.corpus")
+           "repro.analysis", "repro.corpus", "repro.obs",
+           "repro.obs.metrics", "repro.obs.trace")
 
 
 @pytest.mark.parametrize("name", MODULES)

@@ -1,0 +1,579 @@
+"""The unified observability layer (``repro.obs``).
+
+Covers: the metrics registry (legacy dict idioms, snapshot/delta/merge
+semantics — merge associativity/commutativity/zero-identity is
+property-tested with a stateful machine), backcompat of all nine legacy
+``*_counts()`` surfaces against the registry, structured tracing
+(nesting, worker-token propagation, Chrome export ordering), the
+trace_event schema validator and ``bench_block`` against synthetic
+documents, the ``check_obs`` regression gate, and the acceptance
+property: a ``jobs=4`` converged run's trace contains every dispatched
+worker ILP solve exactly once, parented under its dispatching round.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+from _propcheck import (RuleBasedStateMachine, machine_st, rule,
+                        run_state_machine)
+
+from repro.core import (
+    Interval,
+    SearchSpace,
+    SimJob,
+    TaskGraphBuilder,
+    engine_counts,
+    floorplan_counts,
+    merge_floorplan_counts,
+    search_until_converged,
+    simulate_batch,
+)
+from repro.core.ilp import merge_solve_counts, solve_counts
+from repro.analysis import analysis_counts
+from repro.fpga import u280_grid
+from repro.obs import bench_obs_block, metrics, trace
+from repro.search import fault_counts, pool_counts, store_counts
+from repro.search.pool import pool_task_stats
+from repro.search.store import store_lookup_stats
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_BENCHMARKS = os.path.join(os.path.dirname(_HERE), "benchmarks")
+sys.path.insert(0, _BENCHMARKS)
+
+from check_regression import check_obs  # noqa: E402
+
+
+def _chain_graph(n=4, width=64, lut=100):
+    b = TaskGraphBuilder("obschain")
+    for i in range(n - 1):
+        b.stream(f"s{i}", width=width)
+    for i in range(n):
+        b.invoke(f"K{i}", area={"LUT": lut},
+                 ins=[f"s{i - 1}"] if i > 0 else [],
+                 outs=[f"s{i}"] if i < n - 1 else [])
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_group_legacy_dict_idioms():
+    reg = metrics.Registry()
+    g = reg.group("legacy", {"hits": 0, "misses": 0})
+    g["hits"] += 2
+    g.update({"misses": 5})
+    assert dict(g) == {"hits": 2, "misses": 5}
+    # clear() zeroes in place (legacy reset semantics), keeping the keys
+    saved = dict(g)
+    g.clear()
+    assert dict(g) == {"hits": 0, "misses": 0}
+    g.update(saved)  # the save/restore idiom measure_backend_speedup uses
+    assert dict(g) == saved
+
+
+def test_group_reset_hook_fires():
+    fired = []
+    reg = metrics.Registry()
+    g = reg.group("hook", {"n": 0}, on_reset=lambda: fired.append(1))
+    g["n"] = 3
+    g.reset()
+    assert dict(g) == {"n": 0} and fired == [1]
+    g.clear()
+    assert fired == [1, 1]
+
+
+def test_delta_excludes_gauges_and_named_entries():
+    reg = metrics.Registry()
+    g = reg.group("work", {"n": 0})
+    f = reg.group("faults", {"boom": 0})
+    gauge = reg.gauge("queue_depth")
+    before = reg.snapshot()
+    g["n"] += 2
+    f["boom"] += 1
+    gauge.set(7)
+    d = reg.delta(before, exclude=("faults",))
+    assert d == {"work": {"kind": "group", "values": {"n": 2}}}
+
+
+def test_merge_registers_unknown_entries_on_the_fly():
+    src, dst = metrics.Registry(), metrics.Registry()
+    src.group("g", {"a": 0})["a"] = 3
+    src.counter("c").inc(2, kind="x")
+    src.histogram("h").observe(1.5)
+    delta = src.delta({})
+    dst.merge(delta)
+    assert dict(dst.get("g")) == {"a": 3}
+    assert dst.get("c").value(kind="x") == 2
+    assert dst.get("h").aggregate()["count"] == 1
+
+
+def test_histogram_aggregate_merges_exactly():
+    a, b = metrics.Histogram("t"), metrics.Histogram("t")
+    a.observe(1.0, tier="disk")
+    a.observe(3.0, tier="disk")
+    b.observe(2.0, tier="disk")
+    a.merge(b.snapshot())
+    agg = a.aggregate(tier="disk")
+    assert agg == {"count": 3, "sum": 6.0, "min": 1.0, "max": 3.0,
+                   "mean": 2.0}
+
+
+def test_restore_resets_entries_registered_after_snapshot():
+    reg = metrics.Registry()
+    g = reg.group("early", {"n": 0})
+    g["n"] = 1
+    snap = reg.snapshot()
+    late = reg.group("late", {"m": 0})
+    late["m"] = 9
+    g["n"] = 5
+    reg.restore(snap)
+    assert dict(g) == {"n": 1}
+    assert dict(late) == {"m": 0}
+
+
+class MergeAlgebraMachine(RuleBasedStateMachine):
+    """Registry merge is associative + commutative with zero-identity.
+
+    Rules accumulate a random batch of worker-style deltas (group
+    increments, histogram observations, empty deltas); ``finalize``
+    checks that folding them in program order, in reverse order, and
+    with interleaved zero deltas all reach the same registry state.
+    """
+
+    def __init__(self):
+        self.deltas = []
+
+    @rule(field=machine_st.sampled_from(["solved", "hits"]),
+          amount=machine_st.integers(0, 7))
+    def group_delta(self, field, amount):
+        self.deltas.append(
+            {"g": {"kind": "group", "values": {field: amount}}})
+
+    @rule(count=machine_st.integers(1, 4),
+          # dyadic values keep float sums exact, so reordered folds
+          # compare equal without a tolerance
+          value=machine_st.sampled_from([0.0, 0.25, 0.5, 1.0, 1.5]))
+    def hist_delta(self, count, value):
+        self.deltas.append(
+            {"h": {"kind": "histogram",
+                   "values": {"": {"count": count, "sum": value * count,
+                                   "min": value, "max": value}}}})
+
+    @rule(amount=machine_st.integers(1, 5))
+    def counter_delta(self, amount):
+        self.deltas.append(
+            {"c": {"kind": "counter", "values": {"kind=x": amount}}})
+
+    @rule()
+    def zero_delta(self):
+        self.deltas.append({})
+
+    @staticmethod
+    def _fold(deltas):
+        reg = metrics.Registry()
+        for d in deltas:
+            reg.merge(d)
+        return reg.snapshot()
+
+    def finalize(self):
+        fwd = self._fold(self.deltas)
+        rev = self._fold(list(reversed(self.deltas)))
+        assert fwd == rev, "merge order changed the folded state"
+        # zero-delta identity: interleaving empties changes nothing
+        padded = []
+        for d in self.deltas:
+            padded += [{}, d]
+        assert self._fold(padded) == fwd
+
+
+def test_registry_merge_algebra_property():
+    run_state_machine(MergeAlgebraMachine, steps=12, max_examples=8)
+
+
+# ---------------------------------------------------------------------------
+# legacy surface backcompat
+# ---------------------------------------------------------------------------
+
+
+def test_all_legacy_surfaces_are_registry_views():
+    """Every legacy ``*_counts()`` dict must be the exact values held by
+    the registry under its dotted name — the shims are views, not copies
+    that can drift."""
+    from repro.kernels.sim_sweep import sweep_cache_stats
+
+    simulate_batch([SimJob(_chain_graph())], firings=5, backend="event")
+    surfaces = {
+        "sim.engine": engine_counts(),
+        "ilp": solve_counts(),
+        "floorplan": floorplan_counts(),
+        "analysis": analysis_counts(),
+        "pool": pool_counts(),
+        "store": store_counts(),
+        "faults": fault_counts(),
+        "sim.jit_cache": sweep_cache_stats(),
+    }
+    assert len(surfaces) == 8
+    # floorplan_counts() joins in the ilp group's bipartitions as a
+    # derived field; everything else maps one-to-one
+    derived = surfaces["floorplan"].pop("ilp_bipartitions")
+    assert derived == metrics.REGISTRY.get("ilp")["bipartitions"]
+    for name, legacy in surfaces.items():
+        entry = metrics.REGISTRY.get(name)
+        assert entry is not None, f"{name} not registered"
+        assert dict(legacy) == entry.snapshot(), name
+    # the ninth surface: the merge shims mutate the same registry state
+    merge_floorplan_counts({"solved": 2, "cache_hits": 1,
+                            "merge_conflicts": 0})
+    merge_solve_counts(4)
+    assert floorplan_counts()["solved"] == \
+        metrics.REGISTRY.get("floorplan")["solved"]
+    assert solve_counts()["bipartitions"] == \
+        metrics.REGISTRY.get("ilp")["bipartitions"]
+
+
+def test_engine_counts_tick_through_registry():
+    simulate_batch([SimJob(_chain_graph())], firings=5, backend="event")
+    assert engine_counts()["event"] == 1
+    assert metrics.REGISTRY.get("sim.engine")["event"] == 1
+
+
+def test_latency_histograms_surface_as_stats():
+    assert set(pool_task_stats()) == {"ok", "infeasible"}
+    assert set(store_lookup_stats()) == {"hit", "miss"}
+    for agg in (*pool_task_stats().values(), *store_lookup_stats().values()):
+        assert set(agg) == {"count", "sum", "min", "max", "mean"}
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_args():
+    trace.enable(clear=True)
+    with trace.span("outer", label="x", dropped=None):
+        with trace.span("inner"):
+            pass
+    evs = trace.events()
+    assert [e["name"] for e in evs] == ["outer", "inner"]
+    assert evs[1]["parent"] == evs[0]["id"]
+    assert evs[0]["args"] == {"label": "x"}  # None args dropped
+    # inner interval nested inside outer (shared monotonic timebase)
+    assert evs[0]["t_ns"] <= evs[1]["t_ns"]
+    assert (evs[1]["t_ns"] + evs[1]["dur_ns"]
+            <= evs[0]["t_ns"] + evs[0]["dur_ns"])
+
+
+def test_disabled_tracing_is_noop():
+    trace.disable()
+    trace.clear()
+    with trace.span("ghost") as rec:
+        assert rec is None
+    assert trace.events() == []
+
+
+def test_worker_token_parents_spans_across_drain_absorb():
+    """Simulate the pool protocol in-process: the parent opens a round,
+    ships its token, the 'worker' begins with it, records a span, drains,
+    and the parent absorbs — the worker span must parent under the round."""
+    trace.enable(clear=True)
+    with trace.span("search.round", round=0) as round_rec:
+        token = trace.current_token()
+        assert token == round_rec["id"]
+        parent_events = trace.drain()  # stash parent buffer (round is open)
+        trace.begin_worker(token, enable_tracing=True)
+        with trace.span("pool.worker_solve"):
+            pass
+        shipped = trace.drain()
+        trace.absorb(parent_events)
+        trace.absorb(shipped)
+    evs = trace.events()
+    worker = next(e for e in evs if e["name"] == "pool.worker_solve")
+    assert worker["parent"] == round_rec["id"]
+
+
+def test_begin_worker_clears_inherited_buffer():
+    trace.enable(clear=True)
+    with trace.span("stale"):
+        pass
+    trace.begin_worker("tok-1", enable_tracing=True)
+    assert trace.events() == []
+    with trace.span("fresh"):
+        pass
+    assert trace.events()[0]["parent"] == "tok-1"
+
+
+def test_to_chrome_emits_sorted_pairs_and_metadata():
+    trace.enable(clear=True)
+    with trace.span("a.outer"):
+        with trace.span("a.inner"):
+            pass
+    doc = trace.to_chrome()
+    phs = [e["ph"] for e in doc["traceEvents"]]
+    assert phs == ["M", "B", "B", "E", "E"]
+    meta = doc["traceEvents"][0]
+    assert meta["name"] == "process_name"
+    assert meta["args"]["name"] == "repro"
+    b_outer = doc["traceEvents"][1]
+    assert b_outer["cat"] == "a"
+    assert "span_id" in b_outer["args"]
+    assert trace.validate_chrome(doc) == []
+
+
+def test_to_chrome_skips_unclosed_spans():
+    trace.enable(clear=True)
+    rec = trace.begin("never.closed")
+    with trace.span("fine"):
+        pass
+    doc = trace.to_chrome()
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] != "M"}
+    assert names == {"fine"}
+    trace.end(rec)
+
+
+# ---------------------------------------------------------------------------
+# validator + bench block on synthetic documents
+# ---------------------------------------------------------------------------
+
+
+def _ev(ph, name, ts, pid=1, tid=1, **kw):
+    return {"ph": ph, "name": name, "ts": ts, "pid": pid, "tid": tid, **kw}
+
+
+def test_validate_chrome_accepts_well_formed_doc():
+    doc = {"traceEvents": [
+        {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+         "args": {"name": "repro"}},
+        _ev("B", "outer", 0.0), _ev("B", "inner", 1.0),
+        _ev("E", "inner", 2.0), _ev("E", "outer", 3.0),
+    ]}
+    assert trace.validate_chrome(doc) == []
+
+
+def test_validate_chrome_flags_missing_pid_tid():
+    doc = {"traceEvents": [{"ph": "B", "name": "x", "ts": 0.0, "pid": 1}]}
+    errs = trace.validate_chrome(doc)
+    assert any("missing pid/tid" in e for e in errs)
+
+
+def test_validate_chrome_flags_nonmonotonic_ts():
+    doc = {"traceEvents": [
+        _ev("B", "a", 5.0), _ev("E", "a", 2.0),
+    ]}
+    errs = trace.validate_chrome(doc)
+    assert any("not monotonic" in e for e in errs)
+
+
+def test_validate_chrome_flags_unmatched_pairs():
+    assert any("E without B" in e for e in trace.validate_chrome(
+        {"traceEvents": [_ev("E", "x", 1.0)]}))
+    assert any("unclosed B" in e for e in trace.validate_chrome(
+        {"traceEvents": [_ev("B", "x", 1.0)]}))
+    assert any("mismatched B/E" in e for e in trace.validate_chrome(
+        {"traceEvents": [_ev("B", "x", 1.0), _ev("E", "y", 2.0)]}))
+
+
+def test_validate_chrome_flags_empty_and_spanless_docs():
+    assert trace.validate_chrome({}) == ["traceEvents missing or empty"]
+    only_meta = {"traceEvents": [
+        {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+         "args": {"name": "repro"}}]}
+    assert trace.validate_chrome(only_meta) == ["no complete spans in trace"]
+
+
+def _span_rec(id, name, parent=None, t0=0, dur=1_000_000, pid=1, tid=1):
+    return {"id": id, "parent": parent, "name": name, "pid": pid,
+            "tid": tid, "t_ns": t0, "dur_ns": dur, "end_seq": 1, "args": {}}
+
+
+def test_bench_block_counts_unclosed_and_orphans():
+    spans = [
+        _span_rec("1-1", "bench.suite", dur=10_000_000_000),
+        _span_rec("1-2", "bench.prepare", parent="1-1",
+                  dur=9_500_000_000),
+        dict(_span_rec("1-3", "hung", parent="1-1"), dur_ns=None),
+        _span_rec("2-1", "pool.worker_solve", parent="gone-99",
+                  pid=2),
+    ]
+    block = trace.bench_block(10.0, spans)
+    assert block["spans"] == 3          # closed only
+    assert block["unclosed"] == 1
+    assert block["orphans"] == 1
+    assert block["pids"] == 2
+    # coverage from depth-1 children of roots (bench.prepare), not roots
+    assert block["stage_coverage"] == pytest.approx(0.95)
+    assert block["by_name"]["bench.prepare"]["count"] == 1
+
+
+def test_bench_block_falls_back_to_roots_in_flat_trace():
+    spans = [_span_rec("1-1", "only.root", dur=2_000_000_000)]
+    block = trace.bench_block(4.0, spans)
+    assert block["stage_coverage"] == pytest.approx(0.5)
+
+
+def test_bench_block_coverage_capped_at_one():
+    spans = [
+        _span_rec("1-1", "root", dur=2_000_000_000),
+        _span_rec("1-2", "stage", parent="1-1", dur=2_000_000_000),
+    ]
+    assert trace.bench_block(0.5, spans)["stage_coverage"] == 1.0
+
+
+def test_summarize_renders_top_table():
+    trace.enable(clear=True)
+    with trace.span("big.stage"):
+        pass
+    text = trace.summarize(trace.to_chrome())
+    assert "big.stage" in text and "total_ms" in text
+    assert trace.summarize({"traceEvents": []}) == "no complete spans"
+
+
+# ---------------------------------------------------------------------------
+# the check_obs regression gate
+# ---------------------------------------------------------------------------
+
+
+def _obs_doc(**over):
+    obs = {"enabled": True, "spans": 12, "unclosed": 0, "orphans": 0,
+           "pids": 1, "stage_coverage": 0.97, "covered_wall_s": 9.7,
+           "wall_s": 10.0, "by_name": {}}
+    obs.update(over)
+    return {"suite": "fmax_suite", "sim": {"obs": obs}}
+
+
+def test_check_obs_passes_healthy_block(tmp_path):
+    assert check_obs(_obs_doc(), label="t", json_dir=str(tmp_path)) == []
+
+
+def test_check_obs_ignores_uninstrumented_runs(tmp_path):
+    assert check_obs({"suite": "fmax_suite", "sim": {}}, label="t",
+                     json_dir=str(tmp_path)) == []
+    assert check_obs({"suite": "fmax_suite"}, label="t",
+                     json_dir=str(tmp_path)) == []
+
+
+def test_check_obs_flags_zero_span_runs(tmp_path):
+    errs = check_obs(_obs_doc(spans=0), label="t", json_dir=str(tmp_path))
+    assert any("zero spans" in e for e in errs)
+
+
+def test_check_obs_flags_unclosed_orphans_and_low_coverage(tmp_path):
+    errs = check_obs(_obs_doc(unclosed=2, orphans=1, stage_coverage=0.5),
+                     label="t", json_dir=str(tmp_path))
+    assert any("unclosed" in e for e in errs)
+    assert any("orphaned" in e for e in errs)
+    assert any("50%" in e for e in errs)
+
+
+def test_check_obs_validates_referenced_trace_file(tmp_path):
+    good = {"traceEvents": [_ev("B", "a", 0.0), _ev("E", "a", 1.0)]}
+    (tmp_path / "ok.trace.json").write_text(json.dumps(good))
+    assert check_obs(_obs_doc(trace_file="ok.trace.json"), label="t",
+                     json_dir=str(tmp_path)) == []
+    bad = {"traceEvents": [_ev("E", "a", 1.0)]}
+    (tmp_path / "bad.trace.json").write_text(json.dumps(bad))
+    errs = check_obs(_obs_doc(trace_file="bad.trace.json"), label="t",
+                     json_dir=str(tmp_path))
+    assert any("E without B" in e for e in errs)
+    errs = check_obs(_obs_doc(trace_file="missing.trace.json"), label="t",
+                     json_dir=str(tmp_path))
+    assert any("unreadable" in e for e in errs)
+
+
+def test_corpus_suite_obs_block_is_top_level(tmp_path):
+    doc = {"suite": "corpus", "obs": _obs_doc()["sim"]["obs"] | {"spans": 0}}
+    errs = check_obs(doc, label="corpus", json_dir=str(tmp_path))
+    assert any("zero spans" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_obs_cli_summarize_and_validate(tmp_path):
+    trace.enable(clear=True)
+    with trace.span("cli.demo"):
+        pass
+    path = tmp_path / "t.trace.json"
+    trace.write_chrome(str(path))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(_HERE), "src")
+    out = subprocess.run([sys.executable, "-m", "repro.obs", "summarize",
+                          str(path)], capture_output=True, text=True,
+                         env=env)
+    assert out.returncode == 0 and "cli.demo" in out.stdout
+    out = subprocess.run([sys.executable, "-m", "repro.obs", "validate",
+                          str(path)], capture_output=True, text=True,
+                         env=env)
+    assert out.returncode == 0 and "ok: 1 spans" in out.stdout
+    bad = tmp_path / "bad.trace.json"
+    bad.write_text(json.dumps({"traceEvents": [_ev("E", "x", 1.0)]}))
+    out = subprocess.run([sys.executable, "-m", "repro.obs", "validate",
+                          str(bad)], capture_output=True, text=True, env=env)
+    assert out.returncode == 1 and "E without B" in out.stderr
+
+
+# ---------------------------------------------------------------------------
+# acceptance property: jobs=4 converged run's worker spans
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_converged_trace_has_every_worker_solve_once():
+    """A ``jobs=4`` converged run's trace must contain **every** dispatched
+    worker ILP solve exactly once (``pool.worker_solve`` span count ==
+    pool ``dispatched``), and each must reach a ``search.round`` span
+    through its parent chain — the cross-process token really landed."""
+    trace.enable(clear=True)
+    graph = _chain_graph()
+    res = search_until_converged(
+        graph, u280_grid(), jobs=4,
+        space=SearchSpace(utils=Interval(0.7, 1.0)),
+        rounds=2, points_per_round=6, sim_firings=40, tol=0.0)
+    assert res.pool is not None
+    dispatched = pool_counts()["dispatched"]
+    assert dispatched > 0
+    evs = trace.events()
+    by_id = {e["id"]: e for e in evs}
+    solves = [e for e in evs if e["name"] == "pool.worker_solve"]
+    assert len(solves) == dispatched
+    assert len({e["id"] for e in solves}) == dispatched  # exactly once
+    rounds = {e["id"] for e in evs if e["name"] == "search.round"}
+    assert rounds
+    for e in solves:
+        chain = set()
+        p = e["parent"]
+        while p is not None and p in by_id and p not in chain:
+            if p in rounds:
+                break
+            chain.add(p)
+            p = by_id[p]["parent"]
+        assert p in rounds, f"worker solve {e['id']} not under a round"
+        assert e["dur_ns"] is not None  # shipped spans arrive closed
+    # and the whole thing exports to a valid Chrome document
+    doc = trace.to_chrome()
+    assert trace.validate_chrome(doc) == []
+    block = bench_obs_block(1.0)
+    assert block["unclosed"] == 0 and block["orphans"] == 0
+
+
+def test_worker_registry_delta_merges_back():
+    """The pool's generic registry-delta merge must surface worker-side
+    floorplan solves in the parent's counters (the old bespoke
+    merge_floorplan_counts path, now generic)."""
+    graph = _chain_graph()
+    search_until_converged(
+        graph, u280_grid(), jobs=2,
+        space=SearchSpace(utils=Interval(0.7, 1.0)),
+        rounds=1, points_per_round=4, sim_firings=30, tol=0.0)
+    assert floorplan_counts()["solved"] > 0
+    stats = pool_task_stats()
+    assert stats["ok"]["count"] == pool_counts()["merged"]
+    assert stats["ok"]["sum"] > 0.0
+    assert math.isfinite(stats["ok"]["mean"])

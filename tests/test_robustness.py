@@ -33,7 +33,6 @@ from repro.search import (
     FaultPlan,
     fault_counts,
     install_faults,
-    reset_fault_counts,
     search_until_converged,
     warm_floorplan_cache,
 )
@@ -125,7 +124,6 @@ def test_install_none_masks_ambient_env_plan(monkeypatch):
 
 
 def test_fire_counts_and_returns_for_torn_write():
-    reset_fault_counts()
     with install_faults(FaultPlan(torn_write=1.0), env=False):
         assert faults.fire("torn_write", "any-token") is True
     with install_faults(FaultPlan(torn_write=0.0), env=False):

@@ -31,7 +31,6 @@ from repro.core import (
     floorplan_counts,
     initial_floorplan_key,
     merge_floorplan_counts,
-    reset_floorplan_counts,
 )
 from repro.core.ilp import InfeasibleError
 from repro.fpga import benchmarks as B, grid_for, u280_grid
@@ -44,7 +43,6 @@ from repro.search import (
     hypervolume,
     make_proposer,
     pool_counts,
-    reset_pool_counts,
     search_until_converged,
     warm_floorplan_cache,
 )
@@ -164,8 +162,6 @@ def test_pool_survives_worker_infeasible_and_merges_counters():
     graph = _chain_graph(n=5, lut=1000)
     tiny = SlotGrid("tiny", rows=1, cols=2, base_capacity={"LUT": 10},
                     max_util=1.0)
-    reset_floorplan_counts()
-    reset_pool_counts()
     res = explore_design_space(graph, tiny,
                                space=SearchSpace(utils=(0.5, 1.0)),
                                jobs=2)
@@ -209,7 +205,6 @@ def test_initial_floorplan_key_matches_autobridge_first_solve():
 
 
 def test_merge_floorplan_counts_aggregates():
-    reset_floorplan_counts()
     merge_floorplan_counts({"solved": 3, "cache_hits": 2,
                             "ilp_bipartitions": 7})
     merge_floorplan_counts({"solved": 1})
@@ -319,7 +314,6 @@ def test_floorplan_cache_merge_first_writer_wins_and_counts():
 
 
 def test_merge_detects_conflicting_values_and_keeps_first():
-    reset_floorplan_counts()
     a, b = FloorplanCache(), FloorplanCache()
     a.record_infeasible(("k",), "reason A")
     b.record_infeasible(("k",), "reason B")

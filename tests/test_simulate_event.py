@@ -210,7 +210,6 @@ def test_engine_invocation_counters():
     gate asserts never happens on the fast subset)."""
     from repro.core import engine_counts, reset_engine_counts
     jobs = _random_mixed_jobs(7)
-    reset_engine_counts()
     simulate_batch(jobs, firings=10)
     expected = {"event": 0, "cycle": 0, "numpy": 0, "jax": 0, "fallback": 0}
     expected["jax" if _HAVE_JAX else "numpy"] = 1
@@ -251,9 +250,8 @@ def test_jax_backend_three_way_equivalence(seed):
 def test_auto_promotes_to_jax():
     """backend="auto" resolves to the jitted sweep when jax imports and the
     knobs are int32-safe — with zero fallback ticks."""
-    from repro.core import engine_counts, reset_engine_counts
+    from repro.core import engine_counts
     jobs = _random_mixed_jobs(11)
-    reset_engine_counts()
     out = simulate_batch(jobs, firings=10)
     assert all(r.engine == "jax-padded" for r in out)
     counts = engine_counts()
@@ -291,9 +289,8 @@ def test_auto_int32_overflow_degrades_to_numpy_with_fallback_tick():
     """auto with int32-unsafe knobs degrades to the NumPy backend — but
     audibly: a warning plus an engine_counts()["fallback"] tick (what the
     CI gate asserts is zero)."""
-    from repro.core import engine_counts, reset_engine_counts
+    from repro.core import engine_counts
     jobs = [SimJob(_diamond()), SimJob(_diamond())]
-    reset_engine_counts()
     with pytest.warns(UserWarning, match="int32"):
         out = simulate_batch(jobs, firings=10, max_cycles=1 << 31)
     assert all(r.engine == "numpy-batch" for r in out)
@@ -307,10 +304,8 @@ def test_jax_compile_cache_reuses_shapes():
     """Recompilation is keyed by the bucketed padded shape only: re-running
     the same batch with different scalar knobs (firings/max_cycles are
     traced values) must hit the cache, not recompile."""
-    from repro.kernels.sim_sweep import (reset_sweep_cache_stats,
-                                         sweep_cache_stats)
+    from repro.kernels.sim_sweep import sweep_cache_stats
     jobs = _random_mixed_jobs(3)
-    reset_sweep_cache_stats()
     simulate_batch(jobs, firings=10, backend="jax")
     first = dict(sweep_cache_stats())
     simulate_batch(jobs, firings=12, backend="jax")   # same shapes, new knobs

@@ -25,7 +25,6 @@ from repro.search import (
     DiskFloorplanStore,
     SearchJournal,
     key_digest,
-    reset_store_counts,
     store_counts,
 )
 from repro.search import faults
@@ -106,7 +105,6 @@ def test_infeasible_verdict_survives_the_process(tmp_path):
 
 
 def test_torn_entry_quarantined_on_reopen(tmp_path):
-    reset_store_counts()
     first = DiskFloorplanStore(tmp_path)
     autobridge(_chain_graph(), GRID, cache=first)
     (entry,) = list(first.entries_dir.glob("*.fp"))
@@ -166,7 +164,6 @@ def test_key_digest_stable_across_processes():
 
 
 def test_bounded_store_evicts_oldest(tmp_path):
-    reset_store_counts()
     store = DiskFloorplanStore(tmp_path, max_entries=2)
     for i in range(4):
         store.record_infeasible(("k", i), f"v{i}")
@@ -179,7 +176,6 @@ def test_bounded_store_evicts_oldest(tmp_path):
 
 
 def test_concurrent_writer_conflict_detected_first_writer_kept(tmp_path):
-    reset_store_counts()
     a = DiskFloorplanStore(tmp_path)
     b = DiskFloorplanStore(tmp_path)
     a.record_infeasible(("k",), "verdict A")
@@ -193,7 +189,6 @@ def test_concurrent_writer_conflict_detected_first_writer_kept(tmp_path):
 
 
 def test_agreeing_concurrent_writers_are_not_conflicts(tmp_path):
-    reset_store_counts()
     a = DiskFloorplanStore(tmp_path)
     b = DiskFloorplanStore(tmp_path)
     a.record_infeasible(("k",), "same verdict")
@@ -310,5 +305,4 @@ class DiskStoreMachine(RuleBasedStateMachine):
 
 
 def test_disk_store_interleaved_writers_property():
-    reset_store_counts()
     run_state_machine(DiskStoreMachine, steps=14, max_examples=6)
